@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing.
+
+Every benchmark reports BOTH:
+  * measured — wall time of our actual kernels/engine (interpret mode on this
+    CPU host; compiled on a real TPU), and
+  * modeled  — the perfmodel projection for TPU v5e (DESIGN.md §5), which is
+    what maps onto the paper's absolute numbers.
+
+Output rows: (name, us_per_call, derived) — derived is GB/s or a ratio.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import DEFAULT_MODEL, EngineModel
+
+Row = Tuple[str, float, str]
+
+MODEL: EngineModel = DEFAULT_MODEL
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def words_for_bytes(nbytes: int, seed: int = 0) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**32, max(nbytes // 4, 1), dtype=np.uint32))
+
+
+def gbps(nbytes: float, seconds: float) -> float:
+    return nbytes / max(seconds, 1e-12) / 1e9
+
+
+def fmt_gbps(nbytes: float, seconds: float) -> str:
+    return f"{gbps(nbytes, seconds):.2f}GB/s"

@@ -1,0 +1,34 @@
+"""Paper Fig. 14 (G1): equal total transfer, trading transfer size against
+batch size.
+
+Claims validated: for a fixed total, fewer/larger descriptors win
+(per-descriptor overhead); modest batching (4-8) is the sync sweet spot
+when the data is already chunked.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import MODEL, Row, gbps
+
+TOTALS = [65536, 1 << 20, 16 << 20]
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    for total in TOTALS:
+        best = None
+        for bs in (1, 2, 4, 8, 16, 64, 256):
+            ts = total // bs
+            if ts < 256:
+                continue
+            for mode, depth in (("sync", 1), ("async", 32)):
+                t = MODEL.op_time(ts, batch_size=bs, async_depth=depth, n_pe=4)
+                bw = gbps(total, t)
+                out.append((f"fig14/{mode}/total{total>>10}KB/ts{ts}:bs{bs}",
+                            t * 1e6, f"{bw:.2f}GB/s"))
+                if mode == "sync" and (best is None or bw > best[1]):
+                    best = (bs, bw)
+        out.append((f"fig14/claim/total{total>>10}KB_best_sync_bs", 0.0,
+                    f"bs={best[0]} ({best[1]:.2f}GB/s)"))
+    return out

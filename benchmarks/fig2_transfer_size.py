@@ -1,0 +1,48 @@
+"""Paper Fig. 2: speedup of streaming ops over their software counterparts
+vs transfer size, sync (a) and async (b).
+
+Validated claims (TPU-constants analogue):
+  * sync offload wins only above a crossover (paper: ~4KB on DSA);
+  * async offload pulls the crossover down ~an order of magnitude
+    (paper: ~256B);
+  * speedup saturates at the engine/software bandwidth ratio.
+Measured interpret-mode kernel times are reported for the small sizes to
+show the ops are real; the crossover itself is a device-constant question,
+so it comes from the calibrated model.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import MODEL, Row, time_call, words_for_bytes
+from repro.kernels import ops
+
+SIZES = [256, 1024, 4096, 16384, 65536, 262144, 1 << 20, 4 << 20]
+OPS = ["memcpy", "fill", "compare", "crc32", "dualcast"]
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    for size in SIZES:
+        for sync, depth in (("sync", 1), ("async", 32)):
+            t_eng = MODEL.op_time(size, async_depth=depth, n_pe=4)
+            t_sw = MODEL.sw_time(size)
+            out.append(
+                (
+                    f"fig2/{sync}/memcpy/{size}B",
+                    t_eng * 1e6,
+                    f"speedup={t_sw / t_eng:.2f}x",
+                )
+            )
+    for mode, depth in (("sync", 1), ("async", 32)):
+        x = MODEL.crossover_bytes(async_depth=depth, n_pe=4)
+        out.append((f"fig2/crossover/{mode}", 0.0, f"crossover={x / 1024:.2f}KB"))
+    # measured sanity at two sizes (interpret mode; absolute numbers are
+    # host-CPU, shapes only)
+    for size in (4096, 262144):
+        w = words_for_bytes(size)
+        t = time_call(lambda w=w: ops.memcpy(w))
+        out.append((f"fig2/measured/memcpy/{size}B", t * 1e6, "interpret"))
+        t = time_call(lambda w=w: ops.crc32(w))
+        out.append((f"fig2/measured/crc32/{size}B", t * 1e6, "interpret"))
+    return out

@@ -1,0 +1,31 @@
+"""Paper Fig. 4: async Memory Copy throughput vs WQ size (in-flight depth).
+
+Claim validated: throughput rises with queue depth until the launch
+overhead is fully hidden, then saturates (paper: WQS 32 ~= max).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import MODEL, Row, gbps
+
+SIZES = [1024, 16384, 262144]
+DEPTHS = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    for size in SIZES:
+        base = None
+        for d in DEPTHS:
+            t = MODEL.op_time(size, async_depth=d, n_pe=4)
+            bw = gbps(size, t)
+            base = base or bw
+            out.append((f"fig4/ts{size}B/wqs{d}", t * 1e6, f"{bw:.2f}GB/s"))
+        sat = MODEL.op_time(size, async_depth=32, n_pe=4)
+        sat128 = MODEL.op_time(size, async_depth=128, n_pe=4)
+        out.append(
+            (f"fig4/claim/ts{size}B_saturated_by_32", 0.0,
+             f"ratio={sat128 / sat:.4f}")
+        )
+    return out

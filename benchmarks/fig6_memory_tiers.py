@@ -1,0 +1,49 @@
+"""Paper Fig. 6 + Fig. 15: throughput/latency across memory tiers
+([src, dst] in local DRAM / remote socket / CXL), adapted to
+HBM / remote-pod-ICI / host-DRAM / VMEM (G4).
+
+Claims validated: (a) the engine hides remote latency at large transfers
+(remote ~= local once pipelined); (b) mixed placements beat symmetric slow
+placements; (c) the faster-WRITE tier is the better destination (paper:
+CXL reads cheaper than writes -> DRAM destination preferred); (d) cache
+(VMEM) destinations win for consumer-soon data (Fig. 15 / G3).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import MODEL, Row, gbps
+
+TIER_PAIRS = [
+    ("hbm", "hbm"), ("hbm", "remote"), ("remote", "hbm"), ("remote", "remote"),
+    ("hbm", "host"), ("host", "hbm"), ("host", "host"), ("vmem", "hbm"), ("hbm", "vmem"),
+]
+SIZES = [4096, 262144, 4 << 20]
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    for src, dst in TIER_PAIRS:
+        for size in SIZES:
+            t_sync = MODEL.op_time(size, src_tier=src, dst_tier=dst)
+            t_async = MODEL.op_time(size, src_tier=src, dst_tier=dst, async_depth=32)
+            out.append(
+                (f"fig6/[{src}->{dst}]/{size}B", t_sync * 1e6,
+                 f"sync={gbps(size, t_sync):.1f} async={gbps(size, t_async):.1f}GB/s")
+            )
+    # claim (a): the engine hides remote LATENCY once pipelined.  On DSA,
+    # remote also matched local bandwidth (UPI ~ DDR); on TPU, cross-pod ICI
+    # << HBM, so the claim transfers only in the latency-bound regime
+    # (<= ~32KB) — an explicit adaptation difference (DESIGN.md §5).
+    loc = MODEL.throughput(16384, async_depth=32, n_pe=4)
+    rem = MODEL.throughput(16384, async_depth=32, n_pe=4, src_tier="remote", dst_tier="hbm")
+    out.append(("fig6/claim/remote_hides_latency_16KB", 0.0, f"remote/local={rem/loc:.3f}"))
+    loc4m = MODEL.throughput(4 << 20, async_depth=32, n_pe=4)
+    rem4m = MODEL.throughput(4 << 20, async_depth=32, n_pe=4, src_tier="remote", dst_tier="hbm")
+    out.append(("fig6/claim/remote_bw_bound_4MB", 0.0,
+                f"remote/local={rem4m/loc4m:.3f} (TPU ICI<HBM: expected <1)"))
+    # claim (c): faster-write tier as destination
+    h2d = MODEL.throughput(1 << 20, src_tier="host", dst_tier="hbm", async_depth=32)
+    d2h = MODEL.throughput(1 << 20, src_tier="hbm", dst_tier="host", async_depth=32)
+    out.append(("fig6/claim/fast_write_dst_preferred", 0.0, f"host->hbm/hbm->host={h2d/d2h:.3f}"))
+    return out

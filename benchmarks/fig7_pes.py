@@ -1,0 +1,38 @@
+"""Paper Fig. 7: Memory Copy throughput vs number of PEs in the group,
+varying transfer and batch size.
+
+Claims validated: PEs scale small transfers (latency-bound regime); large
+transfers level off because one PE already saturates HBM (G5).  The
+measured part runs our memcpy kernel with n_pe grid lanes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import MODEL, Row, gbps, time_call, words_for_bytes
+from repro.kernels import ops
+
+SIZES = [1024, 16384, 1 << 20]
+PES = [1, 2, 4]
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    for size in SIZES:
+        for pe in PES:
+            t = MODEL.op_time(size, n_pe=pe, batch_size=8)
+            out.append((f"fig7/ts{size}B/pe{pe}", t * 1e6, f"{gbps(size*8, t):.2f}GB/s"))
+    small_gain = MODEL.throughput(1024, n_pe=4, batch_size=8) / MODEL.throughput(
+        1024, n_pe=1, batch_size=8
+    )
+    big_gain = MODEL.throughput(1 << 20, n_pe=4, batch_size=8) / MODEL.throughput(
+        1 << 20, n_pe=1, batch_size=8
+    )
+    out.append(("fig7/claim/small_ts_scales_more", 0.0,
+                f"gain1KB={small_gain:.2f}x gain1MB={big_gain:.2f}x"))
+    # measured: PE lanes on the real kernel
+    w = words_for_bytes(1 << 20)
+    for pe in PES:
+        t = time_call(lambda w=w, pe=pe: ops.memcpy(w, n_pe=pe))
+        out.append((f"fig7/measured/1MB/pe{pe}", t * 1e6, "interpret"))
+    return out

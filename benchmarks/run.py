@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig16]
+
+Prints ``name,us_per_call,derived`` CSV rows and writes
+results/bench/bench.json.  Each module's docstring names the paper claims it
+validates; EXPERIMENTS.md §Paper-validation summarizes the outcomes.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+import time
+from pathlib import Path
+
+MODULES = [
+    "table1_ops",
+    "fig2_transfer_size",
+    "fig3_batch",
+    "fig4_wq_depth",
+    "fig5_latency_breakdown",
+    "fig6_memory_tiers",
+    "fig7_pes",
+    "fig9_wq_config",
+    "fig10_multi_instance",
+    "fig11_umwait",
+    "fig12_cache_pollution",
+    "fig14_ts_bs",
+    "fig16_vhost",
+    "appendix_checkpoint",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        try:
+            rows = mod.rows()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}", flush=True)
+            all_rows.append({"name": name, "us_per_call": us, "derived": derived})
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "bench.json").write_text(json.dumps(all_rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 1: coverage benchmark — every supported streaming operation
+measured (interpret mode) + modeled at 1MB, via the engine path.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MODEL, Row, time_call, words_for_bytes
+from repro.kernels import dif, ops
+
+SIZE = 1 << 20  # 1MB
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    w = words_for_bytes(SIZE)
+    w2 = w.at[123].add(1)
+    pat = jnp.asarray([0xDEADBEEF, 0x12345678], jnp.uint32)
+    off, data, _, _ = ops.delta_create(w2, w, cap=256)
+    pool = w.reshape(-1, 8, 128)[:16]
+
+    cases = [
+        ("memcpy", lambda: ops.memcpy(w), 1.0),
+        ("dualcast", lambda: ops.dualcast(w), 1.5),
+        ("fill", lambda: ops.fill(pat, SIZE // 4), 0.5),
+        ("compare", lambda: ops.compare(w, w2), 1.0),
+        ("compare_pattern", lambda: ops.compare_pattern(w, pat), 0.5),
+        ("crc32", lambda: ops.crc32(w), 0.5),
+        ("delta_create", lambda: ops.delta_create(w2, w, cap=256), 1.0),
+        ("delta_apply", lambda: ops.delta_apply(w, off, data, use_kernel=False), 1.0),
+        ("dif_insert", lambda: dif.dif_insert(w), 1.0),
+        ("dif_check", lambda: dif.dif_check(dif.dif_insert(w)), 0.5),
+        ("batch_copy_x16", lambda: ops.batch_copy(
+            pool, jnp.zeros_like(pool), jnp.arange(16, dtype=jnp.int32),
+            jnp.arange(16, dtype=jnp.int32)), 1.0),
+    ]
+    for name, fn, rf in cases:
+        t = time_call(fn, iters=3, warmup=1)
+        t_model = MODEL.op_time(SIZE, read_factor=rf, async_depth=32)
+        out.append((f"table1/{name}", t * 1e6,
+                    f"modeled_tpu={SIZE/t_model/1e9:.1f}GB/s"))
+    return out

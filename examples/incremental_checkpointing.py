@@ -1,0 +1,45 @@
+"""Fault-tolerance example: incremental checkpoints (delta records + CRC32 +
+dualcast replica), corruption detection, and elastic restore.
+
+    PYTHONPATH=src python examples/incremental_checkpointing.py
+"""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+rng = np.random.default_rng(0)
+state = {"w": jnp.asarray(rng.normal(size=(512, 512)), jnp.float32),
+         "m": jnp.zeros((512, 512), jnp.float32)}
+
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(CheckpointConfig(
+        directory=str(Path(d) / "ck"), full_every=100, replicas=2, async_save=False))
+
+    mgr.save(1, state)  # full snapshot
+    # training drift: 0.5% of weights change per "step"
+    for step in (2, 3):
+        flat = np.asarray(state["w"]).reshape(-1).copy()
+        idx = rng.choice(flat.size, flat.size // 200, replace=False)
+        flat[idx] += 0.01
+        state = {**state, "w": jnp.asarray(flat.reshape(512, 512))}
+        mgr.save(step, state)
+
+    print(f"saves: {mgr.all_steps()}  stats: {mgr.stats}")
+    print(f"delta saved {mgr.stats['bytes_saved_by_delta']/1e6:.2f}MB vs full snapshots")
+
+    # corrupt the newest save's primary copy; CRC detects it and the replica
+    # (dualcast) recovers
+    newest = Path(d) / "ck" / "step_00000003"
+    victim = next(newest.glob("*.bin"), None) or next(newest.glob("*.npz"))
+    raw = bytearray(victim.read_bytes())
+    raw[5] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+
+    step, restored = mgr.restore(treedef_like=state)
+    ok = np.allclose(np.asarray(restored["w"]), np.asarray(state["w"]))
+    print(f"restored step {step} after corruption; exact={ok} (replica recovered it)")

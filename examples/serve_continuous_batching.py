@@ -1,0 +1,46 @@
+"""Serving example: continuous batching with the Vhost-style 3-stage async
+pipeline (paper §6.4) — batched prompt copies through the engine, in-order
+admission via the reorder array, decode overlapped with page movement.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_stream
+from repro.models.api import build_model
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.pipeline import Request, VhostStyleServer
+
+cfg = get_config("gemma3-1b").reduced()
+model = build_model(cfg, remat=False)
+params = model.init(jax.random.key(0))
+
+server = VhostStyleServer(model, params, slots=4, max_cache_len=96,
+                          stream=make_stream(n_instances=2))
+rng = np.random.default_rng(0)
+for i in range(10):
+    server.enqueue(Request(req_id=i,
+                           prompt=rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                           max_new_tokens=6))
+t0 = time.perf_counter()
+steps = server.run_until_drained()
+dt = time.perf_counter() - t0
+m = server.metrics
+print(f"served {m['completed']} requests in {steps} pipeline steps / {dt:.1f}s; "
+      f"{m['decoded_tokens']} tokens; {m['copy_bursts']} batched copy bursts")
+
+# --- two-tier paged KV pool: batch-descriptor swap in/out ---------------------
+pool = PagedKVPool(n_device_pages=16, n_host_pages=32, page_tokens=16,
+                   kv_dim=cfg.num_kv_heads * cfg.head_dim)
+pool.alloc(seq_id=0, n_pages=4)
+import jax.numpy as jnp
+for p in range(4):
+    pool.write_page(0, p, jnp.ones((16, cfg.num_kv_heads * cfg.head_dim)) * p)
+pool.swap_out(0)   # device -> host, ONE batch descriptor
+pool.swap_in(0)    # host -> device
+print(f"kv pool: {pool.stats.pages_moved} pages moved in "
+      f"{pool.stats.batch_copies} batch copies; roundtrip ok")

@@ -1,0 +1,31 @@
+"""End-to-end training driver example: a ~1M-param tinyllama-family model
+for a few hundred steps with async incremental checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+(Full-size runs use the same driver: repro.launch.train --no-reduced with a
+production mesh.)
+"""
+import argparse
+import sys
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    args = ap.parse_args()
+
+    ns = argparse.Namespace(
+        arch=args.arch, reduced=True, steps=args.steps, batch=8, seq=128,
+        lr=1e-3, micro_steps=2, seed=0, ckpt_dir="/tmp/repro_example_ckpt",
+        ckpt_every=50, full_every=4, replicas=2, log_every=25, no_remat=False,
+    )
+    final = train(ns)
+    print(f"reached step {final}")
+
+
+if __name__ == "__main__":
+    main()

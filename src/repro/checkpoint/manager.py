@@ -1,0 +1,309 @@
+"""Asynchronous incremental checkpointing — the paper's Delta Record + CRC +
+Dualcast ops as a fault-tolerance subsystem (DESIGN.md §7).
+
+Layout (one directory per save):
+
+  <dir>/step_00000010/            full snapshot
+      manifest.json               {step, kind, leaves: {key: {mode, shape,
+                                   dtype, crc, nbytes, base_step}}}
+      <key>.bin                   raw little-endian bytes
+  <dir>/step_00000012/            delta save (vs. the last full snapshot)
+      manifest.json
+      <key>.delta.npz             offsets[int32] + data[uint32] word granules
+
+Semantics mirror DSA:
+  * Create Delta Record with a capacity cap — when a leaf's delta overflows
+    (> delta_cap_frac of its words), the completion status is OVERFLOW and
+    the manager falls back to a full copy of that leaf (exactly how software
+    must handle DSA's delta overflow status).
+  * CRC32 per shard file, verified on restore; torn/corrupt saves are
+    detected and the manager falls back to the previous valid manifest.
+  * replicas=2 fans each shard out twice (Dualcast) for rack-failure
+    tolerance.
+  * Saves run on a background thread, overlapped with the next train step
+    (G2: async always); ``wait()`` joins the in-flight save.
+
+Elastic restore: checkpoints store *logical* arrays (no device layout), so
+restore onto any mesh re-shards via ``jax.device_put`` with the target
+shardings (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+import ml_dtypes  # noqa: F401  (registers bfloat16 with numpy)
+
+
+def _tree_flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def _np(leaf) -> np.ndarray:
+    return np.asarray(jax.device_get(leaf))
+
+
+def _u32_view(a: np.ndarray) -> np.ndarray:
+    b = a.tobytes()
+    pad = (-len(b)) % 4
+    if pad:
+        b = b + b"\0" * pad
+    return np.frombuffer(b, dtype="<u4").copy()
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    directory: str
+    full_every: int = 4  # every k-th save is a full snapshot
+    delta_cap_frac: float = 0.25  # overflow threshold (fraction of words)
+    replicas: int = 1  # 2 => dualcast to <dir>-replica
+    verify_crc: bool = True
+    async_save: bool = True
+    keep: int = 8  # retained saves
+    crc_impl: str = "zlib"  # "zlib" (host) | "kernel" (on-device Pallas CRC)
+
+
+class CheckpointManager:
+    def __init__(self, config: CheckpointConfig, stream=None):
+        self.cfg = config
+        self.dir = Path(config.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.replica_dir = Path(str(self.dir) + "-replica") if config.replicas > 1 else None
+        if self.replica_dir:
+            self.replica_dir.mkdir(parents=True, exist_ok=True)
+        self.stream = stream
+        self._thread: Optional[threading.Thread] = None
+        self._save_count = 0
+        self._base: Optional[Dict[str, np.ndarray]] = None  # last full snapshot (u32 views)
+        self._base_step: Optional[int] = None
+        self.stats = {"full_leaves": 0, "delta_leaves": 0, "delta_overflows": 0,
+                      "bytes_written": 0, "bytes_saved_by_delta": 0}
+
+    # ------------------------------------------------------------------ crc
+    def _crc(self, data: bytes) -> int:
+        if self.cfg.crc_impl == "kernel":
+            import jax.numpy as jnp
+
+            from repro.kernels import ops as kops
+
+            pad = (-len(data)) % 4
+            words = np.frombuffer(data + b"\0" * pad, dtype="<u4")
+            return int(kops.crc32(jax.numpy.asarray(words)))
+        return zlib.crc32(data) & 0xFFFFFFFF
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, *, force_full: bool = False):
+        self.wait()  # one in-flight save at a time
+        leaves = [(k, _np(v)) for k, v in _tree_flatten_with_names(tree)]
+        is_full = force_full or self._base is None or (self._save_count % self.cfg.full_every == 0)
+        self._save_count += 1
+
+        def work():
+            self._write(step, leaves, is_full)
+
+        if self.cfg.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, leaves, is_full: bool):
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest: Dict[str, Any] = {
+            "step": step,
+            "kind": "full" if is_full else "delta",
+            "base_step": None if is_full else self._base_step,
+            "leaves": {},
+        }
+        new_base: Dict[str, np.ndarray] = {}
+        for key, arr in leaves:
+            fn = key.replace("/", "__")
+            words = _u32_view(arr)
+            entry: Dict[str, Any] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "nbytes": int(arr.nbytes),
+            }
+            if is_full or key not in (self._base or {}):
+                data = arr.tobytes()
+                (tmp / f"{fn}.bin").write_bytes(data)
+                entry["mode"] = "full"
+                entry["crc"] = self._crc(data)
+                self.stats["full_leaves"] += 1
+                self.stats["bytes_written"] += len(data)
+                new_base[key] = words
+            else:
+                base = self._base[key]
+                cap = max(int(len(words) * self.cfg.delta_cap_frac), 16)
+                diff = np.nonzero(words != base)[0]
+                if len(diff) == 0:
+                    entry["mode"] = "same"
+                    entry["crc"] = self._crc(arr.tobytes())
+                    self.stats["bytes_saved_by_delta"] += arr.nbytes
+                elif len(diff) > cap:
+                    # DSA delta-overflow status -> fall back to full copy
+                    data = arr.tobytes()
+                    (tmp / f"{fn}.bin").write_bytes(data)
+                    entry["mode"] = "full"
+                    entry["crc"] = self._crc(data)
+                    self.stats["delta_overflows"] += 1
+                    self.stats["bytes_written"] += len(data)
+                else:
+                    offs = diff.astype(np.int32)
+                    vals = words[diff]
+                    payload = offs.tobytes() + vals.tobytes()
+                    np.savez(tmp / f"{fn}.delta.npz", offsets=offs, data=vals)
+                    entry["mode"] = "delta"
+                    entry["count"] = int(len(diff))
+                    entry["crc"] = self._crc(arr.tobytes())  # crc of FINAL contents
+                    entry["payload_crc"] = self._crc(payload)
+                    self.stats["delta_leaves"] += 1
+                    self.stats["bytes_written"] += len(payload)
+                    self.stats["bytes_saved_by_delta"] += arr.nbytes - len(payload)
+            manifest["leaves"][key] = entry
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        if self.replica_dir is not None:  # dualcast fan-out
+            rep = self.replica_dir / final.name
+            if rep.exists():
+                shutil.rmtree(rep)
+            shutil.copytree(final, rep)
+        if is_full:
+            self._base = new_base
+            self._base_step = step
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        # never drop the full snapshots that live deltas depend on
+        needed = set()
+        for s in steps[-self.cfg.keep:]:
+            m = self._manifest(s)
+            if m and m.get("base_step") is not None:
+                needed.add(m["base_step"])
+        for s in steps[: -self.cfg.keep]:
+            if s not in needed:
+                shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------ restore
+    def all_steps(self) -> List[int]:
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
+        )
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _manifest(self, step: int, directory: Optional[Path] = None) -> Optional[dict]:
+        p = (directory or self.dir) / f"step_{step:08d}" / "manifest.json"
+        if not p.exists():
+            return None
+        try:
+            return json.loads(p.read_text())
+        except json.JSONDecodeError:
+            return None
+
+    def _load_leaf_full(self, step: int, key: str, entry: dict, directory: Path) -> np.ndarray:
+        fn = key.replace("/", "__")
+        data = (directory / f"step_{step:08d}" / f"{fn}.bin").read_bytes()
+        if self.cfg.verify_crc and self._crc(data) != entry["crc"]:
+            raise IOError(f"CRC mismatch for {key} at step {step}")
+        return np.frombuffer(data, dtype=entry["dtype"]).reshape(entry["shape"]).copy()
+
+    def restore(self, step: Optional[int] = None, *, shardings=None, treedef_like=None):
+        """Returns (step, tree-of-numpy | tree-of-jax.Array if shardings given).
+
+        Falls back step-by-step past CRC-corrupt saves (replica dir tried
+        first when configured)."""
+        self.wait()
+        candidates = self.all_steps()
+        if step is not None:
+            candidates = [s for s in candidates if s <= step]
+        for s in reversed(candidates):
+            try:
+                tree = self._restore_step(s)
+                if shardings is not None:
+                    named = dict(_tree_flatten_with_names(shardings))
+                    tree = {
+                        k: jax.device_put(v, named[k]) if k in named else v
+                        for k, v in tree.items()
+                    }
+                if treedef_like is not None:
+                    tree = self._unflatten_like(treedef_like, tree)
+                return s, tree
+            except (IOError, FileNotFoundError, KeyError) as e:
+                print(f"[checkpoint] step {s} unusable ({e}); falling back")
+        raise FileNotFoundError(f"no restorable checkpoint in {self.dir}")
+
+    def _restore_step(self, step: int) -> Dict[str, np.ndarray]:
+        for directory in filter(None, [self.dir, self.replica_dir]):
+            m = self._manifest(step, directory)
+            if m is None:
+                continue
+            try:
+                return self._materialize(m, step, directory)
+            except IOError:
+                continue  # try replica
+        raise IOError(f"step {step}: no valid manifest/replica")
+
+    def _materialize(self, manifest: dict, step: int, directory: Path) -> Dict[str, np.ndarray]:
+        base_step = manifest.get("base_step")
+        base_manifest = self._manifest(base_step, directory) if base_step is not None else None
+        out: Dict[str, np.ndarray] = {}
+        for key, entry in manifest["leaves"].items():
+            mode = entry["mode"]
+            if mode == "full":
+                out[key] = self._load_leaf_full(step, key, entry, directory)
+            elif mode in ("same", "delta"):
+                if base_manifest is None:
+                    raise IOError(f"delta save {step} missing base {base_step}")
+                arr = self._load_leaf_full(base_step, key, base_manifest["leaves"][key], directory)
+                if mode == "delta":
+                    fn = key.replace("/", "__")
+                    z = np.load(directory / f"step_{step:08d}" / f"{fn}.delta.npz")
+                    words = _u32_view(arr)
+                    words[z["offsets"]] = z["data"]  # Apply Delta Record
+                    arr = (
+                        np.frombuffer(words.tobytes()[: entry["nbytes"]], dtype=entry["dtype"])
+                        .reshape(entry["shape"]).copy()
+                    )
+                if self.cfg.verify_crc and self._crc(arr.tobytes()) != entry["crc"]:
+                    raise IOError(f"CRC mismatch after delta-apply for {key} at {step}")
+                out[key] = arr
+            else:
+                raise IOError(f"unknown mode {mode}")
+        return out
+
+    @staticmethod
+    def _unflatten_like(like, named: Dict[str, np.ndarray]):
+        names = [k for k, _ in _tree_flatten_with_names(like)]
+        leaves = [named[k] for k in names]
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,34 @@
+"""The paper's primary contribution as a composable JAX module: a DSA-style
+descriptor-programmed streaming engine (see DESIGN.md §2-3)."""
+from repro.core.api import Stream, dto, dto_enabled, make_stream
+from repro.core.descriptor import (
+    BatchDescriptor,
+    CacheHint,
+    CompletionRecord,
+    OpType,
+    Status,
+    WorkDescriptor,
+)
+from repro.core.engine import DeviceConfig, GroupConfig, StreamEngine
+from repro.core.perfmodel import DEFAULT_MODEL, EngineModel, TIERS
+from repro.core.queues import WorkQueue
+
+__all__ = [
+    "BatchDescriptor",
+    "CacheHint",
+    "CompletionRecord",
+    "DeviceConfig",
+    "DEFAULT_MODEL",
+    "EngineModel",
+    "GroupConfig",
+    "OpType",
+    "Status",
+    "Stream",
+    "StreamEngine",
+    "TIERS",
+    "WorkDescriptor",
+    "WorkQueue",
+    "dto",
+    "dto_enabled",
+    "make_stream",
+]

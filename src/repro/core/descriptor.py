@@ -1,0 +1,109 @@
+"""Work descriptors and completion records (paper §3.2).
+
+A DSA work descriptor is a 64-byte record naming the operation, source /
+destination, transfer size, and flags; completion is reported through a
+completion record the engine writes when done.  The JAX adaptation keeps the
+same programming model: descriptors are small frozen records over jax.Arrays
+(SVM analogue — no staging or pinning, the engine reads the arrays the
+application already holds), and completion records carry result arrays plus
+the modeled device timing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Optional, Sequence, Tuple
+
+
+class OpType(enum.Enum):
+    MEMCPY = "memcpy"
+    DUALCAST = "dualcast"
+    FILL = "fill"
+    COMPARE = "compare"
+    COMPARE_PATTERN = "compare_pattern"
+    CRC32 = "crc32"
+    DELTA_CREATE = "delta_create"
+    DELTA_APPLY = "delta_apply"
+    DIF_INSERT = "dif_insert"
+    DIF_CHECK = "dif_check"
+    DIF_STRIP = "dif_strip"
+    BATCH_COPY = "batch_copy"  # paged batch-descriptor copy
+    CACHE_FLUSH = "cache_flush"  # modeled only (no TPU analogue)
+
+
+class Status(enum.Enum):
+    PENDING = 0
+    RUNNING = 1
+    SUCCESS = 2
+    ERROR = 3
+    RETRY = 4  # SWQ full (ENQCMD retry semantics)
+    OVERFLOW = 5  # delta record exceeded capacity
+
+
+class CacheHint(enum.Enum):
+    """G3 destination steering: DDIO-style allocate-in-cache vs memory."""
+
+    TO_MEMORY = 0  # non-allocating write (HBM; invalidate cached copies)
+    TO_CACHE = 1  # allocate in cache (VMEM-resident / fused into consumer)
+
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class WorkDescriptor:
+    op: OpType
+    src: Any = None  # jax.Array or tuple of arrays
+    src2: Any = None  # second operand (compare/delta ref)
+    pattern: Any = None  # fill/compare_pattern pattern words
+    n_words: int = 0  # fill length
+    cap: int = 1024  # delta record capacity
+    cache_hint: CacheHint = CacheHint.TO_MEMORY
+    # batch copy:
+    dst_pool: Any = None
+    src_idx: Any = None
+    dst_idx: Any = None
+    # metadata
+    desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    priority: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        if self.op == OpType.FILL:
+            return self.n_words * 4
+        if self.op == OpType.BATCH_COPY and self.src is not None:
+            per = int(self.src.size * self.src.dtype.itemsize // self.src.shape[0])
+            return per * int(self.src_idx.shape[0])
+        if self.src is not None and hasattr(self.src, "size"):
+            return int(self.src.size * self.src.dtype.itemsize)
+        return 0
+
+
+@dataclasses.dataclass
+class BatchDescriptor:
+    """F2: one submission carrying many work descriptors.  The engine fuses
+    homogeneous copy batches into a single batch-copy kernel launch; mixed
+    batches are processed back-to-back under one completion record."""
+
+    descriptors: Sequence[WorkDescriptor]
+    desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    priority: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(d.nbytes for d in self.descriptors)
+
+
+@dataclasses.dataclass
+class CompletionRecord:
+    desc_id: int
+    status: Status = Status.PENDING
+    result: Any = None  # op-specific payload (arrays / scalars)
+    bytes_processed: int = 0
+    modeled_time_us: float = 0.0  # perfmodel estimate on the target TPU
+    wall_time_us: float = 0.0  # measured host time (interpret mode)
+    error: Optional[str] = None
+
+    def is_done(self) -> bool:
+        return self.status in (Status.SUCCESS, Status.ERROR, Status.OVERFLOW)

@@ -1,0 +1,281 @@
+"""The streaming engine: groups, PEs, arbitration, async completion.
+
+Maps the DSA execution pipeline (paper Fig. 1a) onto JAX:
+
+  WQs     -> bounded host-side queues (core/queues.py)
+  group   -> {WQs, PE slots, read-buffer share} with a priority arbiter
+  PE      -> an async in-flight kernel dispatch slot; "processing" a
+             descriptor = dispatching its Pallas kernel (ops.py); JAX's
+             async dispatch gives the overlap the paper gets from hardware
+             queueing, and poll()/wait() are the UMWAIT analogue
+  batch   -> homogeneous copy batches fuse into ONE batch_copy kernel
+             launch (F2); mixed batches run back-to-back under one record
+
+The engine is also a *model*: every completion record carries the projected
+TPU time from core/perfmodel.py next to the measured host time, which is
+what the paper-figure benchmarks plot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.descriptor import (
+    BatchDescriptor,
+    CacheHint,
+    CompletionRecord,
+    OpType,
+    Status,
+    WorkDescriptor,
+)
+from repro.core.perfmodel import DEFAULT_MODEL, EngineModel
+from repro.core.queues import Submittable, WorkQueue
+from repro.kernels import dif as dif_ops
+from repro.kernels import ops
+
+
+def _ready(x) -> bool:
+    try:
+        return x.is_ready()
+    except AttributeError:
+        return True
+
+
+@dataclasses.dataclass
+class GroupConfig:
+    name: str
+    wqs: Sequence[WorkQueue]
+    n_pes: int = 1
+    read_buffers: int = 8  # QoS knob (modeled: scales small-transfer depth)
+
+
+@dataclasses.dataclass
+class DeviceConfig:
+    """Default shape mirrors SPR DSA (Table 2): 8 WQs, 4 PEs per instance."""
+
+    groups: Sequence[GroupConfig] = ()
+    interpret: Optional[bool] = None
+    model: EngineModel = dataclasses.field(default_factory=lambda: DEFAULT_MODEL)
+
+    @staticmethod
+    def default(n_groups: int = 1, wqs_per_group: int = 2, pes_per_group: int = 4,
+                wq_size: int = 32, wq_mode: str = "dedicated") -> "DeviceConfig":
+        groups = []
+        for g in range(n_groups):
+            wqs = [
+                WorkQueue(f"g{g}wq{i}", mode=wq_mode, size=wq_size)
+                for i in range(wqs_per_group)
+            ]
+            groups.append(GroupConfig(f"group{g}", wqs, n_pes=pes_per_group))
+        return DeviceConfig(groups=groups)
+
+
+class _PESlot:
+    """One in-flight descriptor on a processing engine."""
+
+    def __init__(self):
+        self.record: Optional[CompletionRecord] = None
+        self.outputs: Any = None
+        self.t0: float = 0.0
+
+    @property
+    def busy(self) -> bool:
+        return self.record is not None and not self.record.is_done()
+
+    def try_retire(self) -> bool:
+        if self.record is None:
+            return False
+        leaves = jax.tree.leaves(self.outputs)
+        if all(_ready(x) for x in leaves):
+            self.record.wall_time_us = (time.perf_counter() - self.t0) * 1e6
+            if self.record.status == Status.RUNNING:
+                self.record.status = Status.SUCCESS
+            self.record = None
+            self.outputs = None
+            return True
+        return False
+
+
+class StreamEngine:
+    """One DSA-instance analogue."""
+
+    def __init__(self, config: Optional[DeviceConfig] = None, name: str = "dsa0"):
+        self.config = config or DeviceConfig.default()
+        self.name = name
+        self.interpret = (
+            self.config.interpret
+            if self.config.interpret is not None
+            else jax.default_backend() != "tpu"
+        )
+        self.model = self.config.model
+        self._slots: Dict[str, List[_PESlot]] = {
+            g.name: [_PESlot() for _ in range(g.n_pes)] for g in self.config.groups
+        }
+        self._rr: Dict[str, int] = {g.name: 0 for g in self.config.groups}
+        self.records: Dict[int, CompletionRecord] = {}
+
+    # ------------------------------------------------------------------ submission
+    def wq(self, group: int = 0, wq: int = 0) -> WorkQueue:
+        return self.config.groups[group].wqs[wq]
+
+    def submit(self, desc: Submittable, group: int = 0, wq: int = 0,
+               producer: Optional[str] = None) -> Tuple[Status, CompletionRecord]:
+        status = self.wq(group, wq).submit(desc, producer=producer)
+        rec = CompletionRecord(desc_id=desc.desc_id, status=status)
+        if status != Status.RETRY:
+            self.records[desc.desc_id] = rec
+        self.kick()
+        return status, rec
+
+    # ------------------------------------------------------------------ dispatch
+    def kick(self):
+        """Group arbiters: move descriptors from WQs to free PE slots."""
+        for g in self.config.groups:
+            slots = self._slots[g.name]
+            for slot in slots:
+                slot.try_retire()
+            free = [s for s in slots if not s.busy]
+            while free:
+                desc = self._arbitrate(g)
+                if desc is None:
+                    break
+                slot = free.pop()
+                self._launch(slot, desc)
+
+    def _arbitrate(self, g: GroupConfig) -> Optional[Submittable]:
+        """Priority-weighted pick with round-robin anti-starvation."""
+        nonempty = [w for w in g.wqs if len(w)]
+        if not nonempty:
+            return None
+        self._rr[g.name] += 1
+        if self._rr[g.name] % 8 == 0:  # starvation guard: service lowest priority
+            w = min(nonempty, key=lambda w: w.priority)
+        else:
+            w = max(nonempty, key=lambda w: (w.priority, w.occupancy))
+        return w.pop()
+
+    # ------------------------------------------------------------------ execution
+    def _launch(self, slot: _PESlot, desc: Submittable):
+        # descriptors may be enqueued on a WQ directly (raw portal writes);
+        # materialize their completion record lazily
+        rec = self.records.setdefault(desc.desc_id, CompletionRecord(desc_id=desc.desc_id))
+        rec.status = Status.RUNNING
+        slot.record = rec
+        slot.t0 = time.perf_counter()
+        try:
+            if isinstance(desc, BatchDescriptor):
+                outputs, nbytes, modeled = self._execute_batch(desc)
+            else:
+                outputs, nbytes, modeled = self._execute_one(desc)
+            rec.result = outputs
+            rec.bytes_processed = nbytes
+            rec.modeled_time_us = modeled * 1e6
+            slot.outputs = outputs
+        except Exception as e:  # noqa: BLE001
+            rec.status = Status.ERROR
+            rec.error = f"{type(e).__name__}: {e}"
+            slot.record = None
+
+    def _execute_one(self, d: WorkDescriptor):
+        it = self.interpret
+        m = self.model
+        nbytes = d.nbytes
+        if d.op == OpType.MEMCPY:
+            out = ops.memcpy(d.src, interpret=it)
+            t = m.op_time(nbytes)
+        elif d.op == OpType.DUALCAST:
+            out = ops.dualcast(d.src, interpret=it)
+            t = m.op_time(nbytes, read_factor=1.5)
+        elif d.op == OpType.FILL:
+            out = ops.fill(jnp.asarray(d.pattern, jnp.uint32), d.n_words, interpret=it)
+            t = m.op_time(nbytes, read_factor=0.5)  # write-only
+        elif d.op == OpType.COMPARE:
+            out = ops.compare(d.src, d.src2, interpret=it)
+            t = m.op_time(nbytes)
+        elif d.op == OpType.COMPARE_PATTERN:
+            out = ops.compare_pattern(d.src, jnp.asarray(d.pattern, jnp.uint32), interpret=it)
+            t = m.op_time(nbytes, read_factor=0.5)
+        elif d.op == OpType.CRC32:
+            out = ops.crc32(d.src, interpret=it)
+            t = m.op_time(nbytes, read_factor=0.5)
+        elif d.op == OpType.DELTA_CREATE:
+            out = ops.delta_create(d.src, d.src2, cap=d.cap, interpret=it)
+            t = m.op_time(nbytes)
+        elif d.op == OpType.DELTA_APPLY:
+            out = ops.delta_apply(d.src, d.src_idx, d.src2, interpret=it)
+            t = m.op_time(nbytes)
+        elif d.op == OpType.DIF_INSERT:
+            out = dif_ops.dif_insert(d.src, interpret=it)
+            t = m.op_time(nbytes)
+        elif d.op == OpType.DIF_CHECK:
+            out = dif_ops.dif_check(d.src, interpret=it)
+            t = m.op_time(nbytes, read_factor=0.5)
+        elif d.op == OpType.DIF_STRIP:
+            out = dif_ops.dif_strip(d.src)
+            t = m.op_time(nbytes)
+        elif d.op == OpType.BATCH_COPY:
+            out = ops.batch_copy(d.src, d.dst_pool, d.src_idx, d.dst_idx, interpret=it)
+            t = m.op_time(nbytes, batch_size=int(d.src_idx.shape[0]))
+        elif d.op == OpType.CACHE_FLUSH:
+            out = ()  # no TPU analogue (DESIGN.md); modeled only
+            t = m.op_time(nbytes, read_factor=0.5)
+        else:
+            raise ValueError(f"unsupported op {d.op}")
+        return out, nbytes, t
+
+    def _execute_batch(self, b: BatchDescriptor):
+        descs = list(b.descriptors)
+        # F2 fusion: homogeneous same-shape copies -> ONE batch_copy launch
+        if (
+            len(descs) > 1
+            and all(d.op == OpType.MEMCPY for d in descs)
+            and len({(d.src.shape, str(d.src.dtype)) for d in descs}) == 1
+        ):
+            pool = jnp.stack([d.src for d in descs])
+            idx = jnp.arange(len(descs), dtype=jnp.int32)
+            out = ops.batch_copy(pool, jnp.zeros_like(pool), idx, idx, interpret=self.interpret)
+            nbytes = b.nbytes
+            t = self.model.op_time(descs[0].nbytes, batch_size=len(descs))
+            return list(out), nbytes, t
+        outs = []
+        nbytes = 0
+        t = self.model.launch_overhead_s
+        for d in descs:
+            o, nb, td = self._execute_one(d)
+            outs.append(o)
+            nbytes += nb
+            t += td - self.model.launch_overhead_s + self.model.submit_overhead_s
+        return outs, nbytes, t
+
+    # ------------------------------------------------------------------ completion
+    def poll(self, rec: CompletionRecord) -> bool:
+        self.kick()
+        return rec.is_done()
+
+    def wait(self, rec: CompletionRecord):
+        """UMWAIT analogue: block until the completion record resolves."""
+        while not rec.is_done():
+            self.kick()
+            if rec.status == Status.RUNNING:
+                for slots in self._slots.values():
+                    for s in slots:
+                        if s.record is rec:
+                            jax.block_until_ready(jax.tree.leaves(s.outputs))
+                            s.try_retire()
+        self.kick()
+        return rec.result
+
+    def drain(self):
+        while any(len(w) for g in self.config.groups for w in g.wqs) or any(
+            s.busy for slots in self._slots.values() for s in slots
+        ):
+            self.kick()
+            for slots in self._slots.values():
+                for s in slots:
+                    if s.busy:
+                        jax.block_until_ready(jax.tree.leaves(s.outputs))
+                        s.try_retire()

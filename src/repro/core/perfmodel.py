@@ -1,0 +1,131 @@
+"""Analytical performance model — the paper's §4 quantitative analysis
+re-derived for TPU v5e (DESIGN.md §5).
+
+The paper's offload-crossover algebra survives the hardware swap; only the
+constants change:
+
+  DSA (SPR)                      ->  TPU v5e adaptation
+  ENQCMD/MOVDIR64B ~100s ns      ->  kernel launch/dispatch  ~4 us
+  30 GB/s per-instance fabric    ->  819 GB/s HBM (copy: read+write = /2)
+  DDR local/remote, CXL tiers    ->  HBM / remote-pod ICI / host DRAM tiers
+  PE count per group             ->  parallel DMA lanes in the kernel grid
+  WQ depth (async in-flight)     ->  async dispatch depth
+
+Every benchmark (benchmarks/) reports BOTH the measured interpret-mode
+timing of our kernels and this model's projection; EXPERIMENTS.md
+§Paper-validation checks the model reproduces the SHAPES of paper
+Figs. 2-5, 7, 9, 10, 14 (crossover points, batch amortization, PE scaling,
+instance scaling, saturation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# memory tiers: sustained read/write bandwidth (B/s) + extra one-way latency.
+# The host tier is read-fast / write-slow like the paper's CXL device (G4:
+# prefer the faster-WRITE tier as destination).
+TIERS: Dict[str, Dict[str, float]] = {
+    "hbm": {"bw": 819e9, "wr_bw": 819e9, "lat": 0.0},  # paper: local DRAM
+    "vmem": {"bw": 3.2e12, "wr_bw": 3.2e12, "lat": -2e-6},  # paper: LLC (G3);
+    #   negative latency models the skipped HBM round-trip under TO_CACHE
+    "remote": {"bw": 100e9, "wr_bw": 100e9, "lat": 2e-6},  # other pod via ICI
+    "host": {"bw": 32e9, "wr_bw": 24e9, "lat": 10e-6},  # host DRAM over PCIe
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineModel:
+    """Mechanisms (all from the paper, constants re-derived for TPU v5e):
+
+    * per-descriptor processing RAMPS with transfer size (address translation
+      + read-buffer fill latency): bw(s) = peak * s / (s + ramp_bytes);
+    * one PE sustains only ``per_pe_frac`` of the pair bandwidth (finite read
+      buffers — §3.4); a GROUP pools PEs, and in-flight descriptors (batch or
+      async streaming) spread across them (paper: "a descriptor at the head
+      of a WQ is eligible for any free PE");
+    * launch overhead amortizes over async depth (G2) and batch size (G1).
+
+    The software baseline differs fundamentally from the paper's: an XLA copy
+    on TPU is already memory-bound (~300 GB/s), unlike a CPU core's ~10 GB/s
+    — so the LARGE-transfer speedup on TPU is ~1.2-1.4x, and the paper's
+    2-27x speedups translate into pipeline-occupancy savings (Fig. 11
+    umwait fraction) + VMEM non-pollution (G3).  EXPERIMENTS.md §Paper-
+    validation quantifies which claims transfer and which shift.
+    """
+
+    launch_overhead_s: float = 4e-6  # one pallas_call dispatch (ENQCMD analogue)
+    submit_overhead_s: float = 0.3e-6  # per-descriptor prep/submit on host
+    completion_poll_s: float = 0.2e-6  # completion-record check (UMWAIT analogue)
+    pe_peak_bw: float = 819e9 / 2  # HBM copy roofline (rd+wr)
+    pe_ramp_bytes: float = 32e3  # half-saturation transfer size per descriptor
+    per_pe_frac: float = 0.75  # single-PE sustained fraction (read buffers)
+    max_pes: int = 4  # per DSA instance (paper Table 2)
+    sw_memcpy_bw: float = 300e9  # XLA fused copy through the compute pipeline
+    sw_launch_s: float = 2e-6  # XLA dispatch overhead
+
+    # ------------------------------------------------------------------ engine
+    def _pair_bw(self, src_tier: str, dst_tier: str) -> float:
+        if src_tier == dst_tier == "hbm":
+            return self.pe_peak_bw
+        return min(TIERS[src_tier]["bw"], TIERS[dst_tier]["wr_bw"])
+
+    def op_time(
+        self,
+        nbytes: float,
+        *,
+        batch_size: int = 1,
+        n_pe: int = 1,
+        async_depth: int = 1,
+        src_tier: str = "hbm",
+        dst_tier: str = "hbm",
+        read_factor: float = 1.0,  # dualcast reads once, writes twice => 1.5x
+    ) -> float:
+        """Seconds to complete ONE submission of ``batch_size`` descriptors of
+        ``nbytes`` each."""
+        pair = self._pair_bw(src_tier, dst_tier) / read_factor
+        ramp = nbytes / (nbytes + self.pe_ramp_bytes)
+        # in-flight descriptors (batch members and async stream) spread over PEs
+        concurrent = min(batch_size * max(async_depth, 1), n_pe)
+        agg_bw = min(concurrent * self.per_pe_frac * ramp, 1.0) * pair
+        lat = max(TIERS[src_tier]["lat"] + TIERS[dst_tier]["lat"], 0.0)
+        launch = self.launch_overhead_s / max(async_depth, 1) + lat / max(async_depth, 1)
+        submit = self.submit_overhead_s * batch_size + self.completion_poll_s
+        return launch + submit + batch_size * nbytes / agg_bw
+
+    def throughput(self, nbytes: float, **kw) -> float:
+        bs = kw.get("batch_size", 1)
+        return bs * nbytes / self.op_time(nbytes, **kw)
+
+    def op_time_default_pes(self, nbytes: float, **kw) -> float:
+        """op_time with the default group shape (all 4 PEs pooled)."""
+        kw.setdefault("n_pe", self.max_pes)
+        return self.op_time(nbytes, **kw)
+
+    # ------------------------------------------------------------------ baseline "core"
+    def sw_time(self, nbytes: float, *, src_tier: str = "hbm", dst_tier: str = "hbm") -> float:
+        bw = min(self.sw_memcpy_bw, TIERS[src_tier]["bw"], TIERS[dst_tier]["bw"])
+        return self.sw_launch_s + nbytes / bw
+
+    def sw_throughput(self, nbytes: float, **kw) -> float:
+        return nbytes / self.sw_time(nbytes, **kw)
+
+    def speedup(self, nbytes: float, **kw) -> float:
+        return self.throughput(nbytes, **kw) / self.sw_throughput(
+            nbytes, src_tier=kw.get("src_tier", "hbm"), dst_tier=kw.get("dst_tier", "hbm")
+        )
+
+    def crossover_bytes(self, **kw) -> float:
+        """Smallest transfer where engine >= software (paper: ~4KB sync,
+        ~256B async on DSA)."""
+        lo, hi = 64.0, 1 << 30
+        for _ in range(60):
+            mid = (lo + hi) / 2
+            if self.speedup(mid, **kw) >= 1.0:
+                hi = mid
+            else:
+                lo = mid
+        return hi
+
+
+DEFAULT_MODEL = EngineModel()

@@ -1,0 +1,67 @@
+"""Work queues (paper §3.2): dedicated (DWQ) vs shared (SWQ).
+
+DWQ: single producer, MOVDIR64B-style posted submit — always accepted while
+capacity remains, owner-checked.
+SWQ: multi-producer, ENQCMD-style non-posted submit — returns RETRY when
+full; internal lock models the hardware's atomic enqueue (software needs no
+locks, per the paper).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Deque, Optional, Union
+
+from repro.core.descriptor import BatchDescriptor, Status, WorkDescriptor
+
+Submittable = Union[WorkDescriptor, BatchDescriptor]
+
+
+class WorkQueue:
+    def __init__(self, name: str, mode: str = "dedicated", size: int = 32,
+                 priority: int = 0, owner: Optional[str] = None):
+        assert mode in ("dedicated", "shared")
+        self.name = name
+        self.mode = mode
+        self.size = size
+        self.priority = priority
+        self.owner = owner
+        self._q: Deque[Submittable] = collections.deque()
+        self._lock = threading.Lock()
+        self.stats = {"submitted": 0, "retried": 0, "dispatched": 0}
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self._q) / self.size
+
+    def submit(self, desc: Submittable, producer: Optional[str] = None) -> Status:
+        if self.mode == "dedicated":
+            if self.owner is not None and producer is not None and producer != self.owner:
+                raise PermissionError(
+                    f"DWQ {self.name} owned by {self.owner}; got producer {producer}"
+                )
+            if len(self._q) >= self.size:
+                # a full DWQ is a programming error in DSA (posted write drops)
+                self.stats["retried"] += 1
+                return Status.RETRY
+            self._q.append(desc)
+            self.stats["submitted"] += 1
+            return Status.PENDING
+        # shared: atomic non-posted enqueue with RETRY status
+        with self._lock:
+            if len(self._q) >= self.size:
+                self.stats["retried"] += 1
+                return Status.RETRY
+            self._q.append(desc)
+            self.stats["submitted"] += 1
+            return Status.PENDING
+
+    def pop(self) -> Optional[Submittable]:
+        with self._lock:
+            if self._q:
+                self.stats["dispatched"] += 1
+                return self._q.popleft()
+            return None

@@ -1,0 +1,96 @@
+"""Engine telemetry — the paper's PCM counterpart (§5: "DSA performance
+telemetry functionalities are provided by the PCM library ... inbound-
+outbound traffic and request count on each DSA instance").
+
+Counters per engine instance: per-op counts/bytes/latency, WQ occupancy
+samples, PE busy fractions, retry totals.  ``report()`` renders the
+PCM-style table; ``snapshot()`` returns a dict for programmatic use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.core.engine import StreamEngine
+
+
+@dataclasses.dataclass
+class OpCounter:
+    count: int = 0
+    bytes: int = 0
+    modeled_us: float = 0.0
+    wall_us: float = 0.0
+
+
+class Telemetry:
+    """Attach to one or more engines; samples are taken on poll()."""
+
+    def __init__(self, engines: List[StreamEngine]):
+        self.engines = engines
+        self.ops: Dict[str, Dict[str, OpCounter]] = {
+            e.name: defaultdict(OpCounter) for e in engines
+        }
+        self.wq_samples: Dict[str, List[float]] = {e.name: [] for e in engines}
+        self._seen: set = set()
+        self.t0 = time.perf_counter()
+
+    def sample(self):
+        for e in self.engines:
+            occ = [w.occupancy for g in e.config.groups for w in g.wqs]
+            self.wq_samples[e.name].append(sum(occ) / max(len(occ), 1))
+            for desc_id, rec in list(e.records.items()):
+                if desc_id in self._seen or not rec.is_done():
+                    continue
+                self._seen.add(desc_id)
+                # op name from record payload is not retained; bucket by size class
+                bucket = _size_bucket(rec.bytes_processed)
+                c = self.ops[e.name][bucket]
+                c.count += 1
+                c.bytes += rec.bytes_processed
+                c.modeled_us += rec.modeled_time_us
+                c.wall_us += rec.wall_time_us
+
+    def snapshot(self) -> dict:
+        self.sample()
+        out = {"elapsed_s": time.perf_counter() - self.t0, "engines": {}}
+        for e in self.engines:
+            retries = sum(w.stats["retried"] for g in e.config.groups for w in g.wqs)
+            submitted = sum(w.stats["submitted"] for g in e.config.groups for w in g.wqs)
+            samples = self.wq_samples[e.name]
+            out["engines"][e.name] = {
+                "submitted": submitted,
+                "retries": retries,
+                "mean_wq_occupancy": sum(samples) / max(len(samples), 1),
+                "ops": {
+                    k: dataclasses.asdict(v) for k, v in sorted(self.ops[e.name].items())
+                },
+            }
+        return out
+
+    def report(self) -> str:
+        snap = self.snapshot()
+        lines = [f"engine telemetry ({snap['elapsed_s']:.2f}s)"]
+        for name, e in snap["engines"].items():
+            lines.append(
+                f"  {name}: submitted={e['submitted']} retries={e['retries']} "
+                f"wq_occ={e['mean_wq_occupancy']:.2f}"
+            )
+            for bucket, c in e["ops"].items():
+                gbps = c["bytes"] / max(c["modeled_us"] * 1e-6, 1e-12) / 1e9
+                lines.append(
+                    f"    {bucket:>8s}: n={c['count']:<5d} bytes={c['bytes']:<12d} "
+                    f"modeled={c['modeled_us']:.1f}us ({gbps:.1f}GB/s projected)"
+                )
+        return "\n".join(lines)
+
+
+def _size_bucket(nbytes: int) -> str:
+    if nbytes < 4096:
+        return "<4KB"
+    if nbytes < 65536:
+        return "4-64KB"
+    if nbytes < 1 << 20:
+        return "64KB-1MB"
+    return ">=1MB"

@@ -1,0 +1,3 @@
+from repro.data.pipeline import Prefetcher, SyntheticLMDataset
+
+__all__ = ["Prefetcher", "SyntheticLMDataset"]

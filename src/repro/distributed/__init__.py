@@ -1,0 +1,4 @@
+from repro.distributed.annotate import ann, logical_sharding, use_rules
+from repro.distributed.sharding import ShardingRules, rules_for_mesh
+
+__all__ = ["ann", "logical_sharding", "use_rules", "ShardingRules", "rules_for_mesh"]

@@ -1,0 +1,50 @@
+"""Activation sharding annotations resolved against a context-set mesh+rules.
+
+``ann(x, "batch", None, "heads", None)`` applies a
+``with_sharding_constraint`` when a mesh context is active, and is a no-op
+otherwise (so the same model code runs in single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import ShardingRules
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: ShardingRules):
+    prev = _current()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def logical_sharding(shape, logical_dims) -> Optional[NamedSharding]:
+    ctx = _current()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    return NamedSharding(mesh, rules.spec(shape, logical_dims))
+
+
+def ann(x: jax.Array, *logical_dims):
+    """Constrain ``x``'s sharding by logical dim names (None = unsharded)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.spec(x.shape, logical_dims)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,106 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Models annotate tensors with *logical* dimension names ("batch", "heads",
+"mlp", ...).  ``ShardingRules`` maps logical names to mesh axes and resolves a
+concrete ``PartitionSpec`` for a given shape.  A dimension that is not
+divisible by its mesh-axes product silently falls back to replication — this
+is what guarantees every (arch x shape x mesh) dry-run cell compiles even for
+odd head counts (25) and odd vocabs (50280, 32001, 256206); the roofline
+report then shows what the fallback costs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+def _as_tuple(a: Axes) -> Tuple[str, ...]:
+    if a is None:
+        return ()
+    if isinstance(a, str):
+        return (a,)
+    return tuple(a)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical dim name -> mesh axes."""
+
+    mesh_axes: Dict[str, int]  # axis name -> size (from the mesh)
+    table: Dict[str, Axes] = field(default_factory=dict)
+
+    def axis_size(self, axes: Axes) -> int:
+        return math.prod(self.mesh_axes[a] for a in _as_tuple(axes)) or 1
+
+    def resolve_dim(self, dim_size: int, logical: Optional[str]) -> Axes:
+        if logical is None:
+            return None
+        axes = self.table.get(logical)
+        if axes is None:
+            return None
+        n = self.axis_size(axes)
+        if n <= 1 or dim_size % n != 0:
+            return None  # divisibility fallback -> replicate this dim
+        t = _as_tuple(axes)
+        return t[0] if len(t) == 1 else t
+
+    def spec(self, shape: Sequence[int], logical_dims: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(logical_dims), (shape, logical_dims)
+        used: set = set()
+        parts = []
+        for dim, name in zip(shape, logical_dims):
+            ax = self.resolve_dim(dim, name)
+            # one mesh axis may appear at most once in a spec
+            t = _as_tuple(ax)
+            if any(a in used for a in t):
+                ax = None
+                t = ()
+            used.update(t)
+            parts.append(ax)
+        return P(*parts)
+
+    def with_overrides(self, **table_updates: Axes) -> "ShardingRules":
+        new = dict(self.table)
+        new.update(table_updates)
+        return replace(self, table=new)
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Optional[Dict[str, Axes]] = None) -> ShardingRules:
+    """Default production rules.
+
+    batch  -> all data-like axes ("pod","data")
+    model-parallel dims ("heads", "kv_heads", "mlp", "vocab", "expert",
+    "dinner") -> "model".  "seq" is unsharded by default; the long-context
+    decode hillclimb overrides it to "data" (sequence-parallel KV).
+    """
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    table: Dict[str, Axes] = {
+        "batch": data_axes if data_axes else None,
+        "seq": None,
+        "embed": None,
+        "heads": "model" if "model" in axes else None,
+        "kv_heads": "model" if "model" in axes else None,
+        "qkv_flat": "model" if "model" in axes else None,
+        "mlp": "model" if "model" in axes else None,
+        "expert_ff": "model" if "model" in axes else None,
+        "vocab": "model" if "model" in axes else None,
+        "embed_alt": "model" if "model" in axes else None,  # fallback for odd vocab
+        "expert": "model" if "model" in axes else None,
+        "dinner": "model" if "model" in axes else None,
+        "dstate": None,
+        "opt": None,  # ZeRO-1: override to data axes to shard optimizer state
+    }
+    if overrides:
+        table.update(overrides)
+    return ShardingRules(mesh_axes=axes, table=table)
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules, shape, logical_dims) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(shape, logical_dims))

@@ -1,0 +1,55 @@
+"""Batch-descriptor page copy kernel (paper F2 — THE key DSA feature).
+
+A batch descriptor delivers an array of work descriptors processed in one
+submission.  TPU-native analogue: ONE pallas_call whose grid walks a
+scalar-prefetched descriptor table (src_page -> dst_page), re-pointing each
+grid step's DMA via the BlockSpec index_map.  This amortizes a single kernel
+launch over N page copies exactly as DSA amortizes one ENQCMD over N
+descriptors — and it is the engine behind paged-KV-cache block moves
+(serving) and incremental-checkpoint page flushes.
+
+The destination pool is donated (input_output_aliased), so untouched pages
+keep their contents — matching DSA semantics of scattered writes into an
+existing buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _batch_copy_kernel(src_idx_ref, dst_idx_ref, src_pool_ref, dst_in_ref, dst_pool_ref):
+    del dst_in_ref  # aliased with the output; untouched pages persist
+    dst_pool_ref[...] = src_pool_ref[...]
+
+
+def batch_copy_pages(
+    src_pool: jax.Array,  # [P, rows, 128]
+    dst_pool: jax.Array,  # [Q, rows, 128] (donated)
+    src_idx: jax.Array,  # [N] i32
+    dst_idx: jax.Array,  # [N] i32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    n = src_idx.shape[0]
+    rows = src_pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda i, sidx, didx: (sidx[i], 0, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda i, sidx, didx: (didx[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, LANES), lambda i, sidx, didx: (didx[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _batch_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_pool.shape, dst_pool.dtype),
+        input_output_aliases={3: 0},  # dst_pool arg (after 2 scalars + src) -> output
+        interpret=interpret,
+    )(src_idx, dst_idx, src_pool, dst_pool)

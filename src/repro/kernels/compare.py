@@ -1,0 +1,82 @@
+"""Memory Compare / Compare Pattern kernels (paper Table 1, "Compare").
+
+Each grid block emits (mismatch_count, first_diff_index_or_-1) for its tile;
+the ops layer reduces blocks to the global (equal?, first_diff) pair —
+matching DSA's completion-record semantics (status + first-diff offset).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _compare_kernel(a_ref, b_ref, out_ref):
+    diff = a_ref[...] != b_ref[...]
+    n = jnp.sum(diff.astype(jnp.int32))
+    flat = diff.reshape(-1)
+    idx = jnp.argmax(flat).astype(jnp.int32)
+    out_ref[0, 0] = n
+    out_ref[0, 1] = jnp.where(n > 0, idx, -1)
+
+
+def compare_words(
+    a: jax.Array,  # [rows, 128] uint32
+    b: jax.Array,
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns per-block [n_blocks, 2] i32: (mismatches, first_idx|-1)."""
+    rows = a.shape[0]
+    assert a.shape == b.shape and rows % block_rows == 0
+    n_blocks = rows // block_rows
+    return pl.pallas_call(
+        _compare_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 2), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _compare_pattern_kernel(a_ref, pat_ref, out_ref):
+    rows, lanes = a_ref.shape
+    p = pat_ref.shape[-1]
+    lane_idx = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1) % p
+    expect = jnp.take(pat_ref[0], lane_idx, axis=0)
+    diff = a_ref[...] != expect
+    n = jnp.sum(diff.astype(jnp.int32))
+    idx = jnp.argmax(diff.reshape(-1)).astype(jnp.int32)
+    out_ref[0, 0] = n
+    out_ref[0, 1] = jnp.where(n > 0, idx, -1)
+
+
+def compare_pattern_words(
+    a: jax.Array,
+    pattern: jax.Array,  # [p] uint32
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    rows = a.shape[0]
+    p = pattern.shape[0]
+    assert rows % block_rows == 0 and LANES % p == 0
+    n_blocks = rows // block_rows
+    return pl.pallas_call(
+        _compare_pattern_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 2), jnp.int32),
+        interpret=interpret,
+    )(a, pattern.reshape(1, p))

@@ -1,0 +1,59 @@
+"""Apply Delta Record kernel (paper Table 1, "Compare").
+
+Scatters (offset, word) pairs into a copy of the reference buffer.  Offsets
+arrive via scalar prefetch (SMEM); the kernel walks the record serially with
+dynamic stores — delta records are small by design (DSA caps them at 4KB),
+so the serial loop is latency- not bandwidth-bound.  The ops layer provides
+a vectorized jnp fallback for very large records.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _delta_apply_kernel(off_ref, data_ref, ref_ref, out_ref):
+    out_ref[...] = ref_ref[...]
+    cap = off_ref.shape[0]
+    lanes = out_ref.shape[1]
+
+    def body(i, _):
+        off = off_ref[i]
+
+        @pl.when(off >= 0)
+        def _apply():
+            r = off // lanes
+            c = off % lanes
+            blk = pl.load(out_ref, (pl.ds(r, 1), pl.ds(0, lanes)))
+            lane = jax.lax.broadcasted_iota(jnp.int32, (1, lanes), 1)
+            blk = jnp.where(lane == c, data_ref[i], blk)
+            pl.store(out_ref, (pl.ds(r, 1), pl.ds(0, lanes)), blk)
+
+        return 0
+
+    jax.lax.fori_loop(0, cap, body, 0)
+
+
+def delta_apply_words(
+    ref: jax.Array,  # [rows, 128] uint32
+    offsets: jax.Array,  # [cap] i32, -1 padded
+    data: jax.Array,  # [cap] u32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(ref.shape, lambda i, off, dat: (0, 0))],
+        out_specs=pl.BlockSpec(ref.shape, lambda i, off, dat: (0, 0)),
+    )
+    return pl.pallas_call(
+        _delta_apply_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(ref.shape, ref.dtype),
+        interpret=interpret,
+    )(offsets, data, ref)

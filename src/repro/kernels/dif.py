@@ -1,0 +1,57 @@
+"""Data Integrity Field (DIF) operations (paper Table 1, "Move").
+
+DSA checks/inserts/strips an 8-byte DIF per 512/4096-byte block while moving
+data.  TPU adaptation: blocks map to rows of a [n_blocks, block_words] word
+grid; the per-block CRC reuses the chunk-parallel CRC kernel (every block is
+a "chunk", all checked in one vector pass), and the tag framing is a pure
+reshape/concat.  Used for checkpoint-shard integrity framing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crc32 as _crc
+from repro.kernels import ops as _ops
+
+
+def _block_crcs(blocks: jax.Array, interpret: bool) -> jax.Array:
+    """blocks [n_blocks, block_words] u32 -> per-block CRC32 [n_blocks] u32."""
+    return _crc.crc32_chunk_states(blocks, _ops._CRC_TABLES, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "ref_tag", "interpret"))
+def dif_insert(words: jax.Array, *, block_words: int = 128, ref_tag: int = 0,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """[n_blocks*block_words] u32 -> framed [n_blocks, block_words+2]."""
+    interpret = _ops._interpret_default() if interpret is None else interpret
+    blocks = words.reshape(-1, block_words)
+    crcs = _block_crcs(blocks, interpret)
+    n = blocks.shape[0]
+    tags = (jnp.uint32(ref_tag) << 16) | (jnp.arange(n, dtype=jnp.uint32) & jnp.uint32(0xFFFF))
+    return jnp.concatenate([blocks, crcs[:, None], tags[:, None]], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def dif_check(framed: jax.Array, *, block_words: int = 128,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """framed [n_blocks, block_words+2] -> per-block ok mask [n_blocks]."""
+    interpret = _ops._interpret_default() if interpret is None else interpret
+    blocks = framed[:, :block_words]
+    crcs = _block_crcs(blocks, interpret)
+    return crcs == framed[:, block_words]
+
+
+def dif_strip(framed: jax.Array, *, block_words: int = 128) -> jax.Array:
+    return framed[:, :block_words].reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "ref_tag", "interpret"))
+def dif_update(framed: jax.Array, *, block_words: int = 128, ref_tag: int = 0,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Recompute tags over (possibly modified) framed data."""
+    return dif_insert(dif_strip(framed, block_words=block_words),
+                      block_words=block_words, ref_tag=ref_tag, interpret=interpret)

@@ -1,0 +1,42 @@
+"""Dualcast kernel (paper Table 1): one source read, two destination writes.
+
+The point of the DSA op is halving read traffic for replica writes; on TPU
+the single pallas_call reads each tile into VMEM once and stores it twice —
+used by the checkpoint manager for primary+replica shard fan-out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _dualcast_kernel(src_ref, d1_ref, d2_ref):
+    blk = src_ref[...]
+    d1_ref[...] = blk
+    d2_ref[...] = blk
+
+
+def dualcast_words(
+    src: jax.Array,  # [rows, 128] uint32
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+):
+    rows = src.shape[0]
+    assert rows % block_rows == 0
+    n_blocks = rows // block_rows
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _dualcast_kernel,
+        grid=(n_blocks,),
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(src.shape, src.dtype),
+            jax.ShapeDtypeStruct(src.shape, src.dtype),
+        ],
+        interpret=interpret,
+    )(src)

@@ -1,0 +1,47 @@
+"""Memory Fill kernel (paper Table 1, "Fill").
+
+Fills a word buffer with a repeating 2- or 4-word pattern (the paper's
+8/16-byte patterns).  ``nt=True`` models the non-allocating variant
+(cache-control flag G3): on real TPU the difference is the destination
+memory-space hint; the data path is identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _fill_kernel(pat_ref, dst_ref):
+    rows, lanes = dst_ref.shape
+    p = pat_ref.shape[-1]
+    pat = pat_ref[0]  # [p]
+    # lane l of row r holds word index (block_offset + r*lanes + l); the
+    # pattern index depends only on (global word index % p) — p divides LANES
+    # for p in (2, 4), so the tile pattern is position-independent.
+    lane_idx = jax.lax.broadcasted_iota(jnp.int32, (rows, lanes), 1) % p
+    dst_ref[...] = jnp.take(pat, lane_idx, axis=0)
+
+
+def fill_words(
+    rows: int,
+    pattern: jax.Array,  # [p] uint32, p in (1, 2, 4)
+    *,
+    block_rows: int = 8,
+    n_pe: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    assert rows % (block_rows * n_pe) == 0
+    p = pattern.shape[0]
+    assert LANES % p == 0, "pattern must divide the lane width"
+    blocks_per_pe = rows // block_rows // n_pe
+    return pl.pallas_call(
+        _fill_kernel,
+        grid=(n_pe, blocks_per_pe),
+        in_specs=[pl.BlockSpec((1, p), lambda pe, j: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda pe, j, bpp=blocks_per_pe: (pe * bpp + j, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint32),
+        interpret=interpret,
+    )(pattern.reshape(1, p))

@@ -1,0 +1,40 @@
+"""Memory Copy kernel (paper Table 1, "Move").
+
+Tiled HBM -> VMEM -> HBM stream.  The grid is (n_pe, blocks_per_pe): the
+leading grid dim models DSA processing-engine lanes (G5 — PE-level
+parallelism); each PE streams its contiguous span of (rows x 128) tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _memcpy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def memcpy_words(
+    src: jax.Array,  # [rows, 128] uint32
+    *,
+    block_rows: int = 8,
+    n_pe: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    rows = src.shape[0]
+    assert src.shape[1] == LANES and rows % (block_rows * n_pe) == 0, (src.shape, block_rows, n_pe)
+    blocks_per_pe = rows // block_rows // n_pe
+
+    return pl.pallas_call(
+        _memcpy_kernel,
+        grid=(n_pe, blocks_per_pe),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda pe, j, bpp=blocks_per_pe: (pe * bpp + j, 0))
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda pe, j, bpp=blocks_per_pe: (pe * bpp + j, 0)),
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        interpret=interpret,
+    )(src)

@@ -1,0 +1,267 @@
+"""jit'd public wrappers over the Pallas streaming kernels.
+
+Handles: arbitrary input shapes/dtypes (word view + padding), interpret-mode
+autodetection (CPU host -> interpret=True; TPU -> compiled), block/PE
+parameter selection, and the jnp compaction/combination stages that pair
+with each kernel (delta compaction, CRC chunk combine, compare reduce).
+
+Every function has a bit-exact oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (
+    batch_copy as _bc,
+    compare as _cmp,
+    crc32 as _crc,
+    delta_apply as _da,
+    delta_create as _dc,
+    dualcast as _dual,
+    fill as _fill,
+    memcpy as _mc,
+    ref as _ref,
+)
+
+LANES = 128
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------- word view
+def _bitcast_to_u32(x: jax.Array) -> jax.Array:
+    itemsize = x.dtype.itemsize
+    if itemsize == 4:
+        return jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32)
+    if itemsize < 4:
+        return jax.lax.bitcast_convert_type(
+            x.reshape(-1, 4 // itemsize), jnp.uint32
+        ).reshape(-1)
+    return jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint32).reshape(-1)
+
+
+def to_words(x: jax.Array, row_multiple: int = 1) -> Tuple[jax.Array, int, tuple, jnp.dtype]:
+    """Bit-cast any array to a padded [rows, 128] uint32 word grid."""
+    nbytes = x.size * x.dtype.itemsize
+    assert nbytes % 4 == 0, "buffers must be 4-byte multiples"
+    flat = _bitcast_to_u32(x)
+    n_words = flat.shape[0]
+    rows = -(-n_words // LANES)
+    rows = -(-rows // row_multiple) * row_multiple
+    pad = rows * LANES - n_words
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint32)])
+    return flat.reshape(rows, LANES), n_words, x.shape, x.dtype
+
+
+def from_words(words: jax.Array, n_words: int, shape: tuple, dtype) -> jax.Array:
+    flat = words.reshape(-1)[:n_words]
+    itemsize = jnp.dtype(dtype).itemsize
+    if itemsize == 4:
+        out = jax.lax.bitcast_convert_type(flat, dtype)
+    elif itemsize < 4:
+        out = jax.lax.bitcast_convert_type(flat, dtype).reshape(-1)
+    else:
+        out = jax.lax.bitcast_convert_type(flat.reshape(-1, itemsize // 4), dtype).reshape(-1)
+    return out.reshape(shape)
+
+
+def _pick_block_rows(rows: int, n_pe: int, target: int = 64) -> int:
+    """Largest block_rows <= target such that n_pe * block_rows | rows."""
+    for br in range(min(target, rows), 0, -1):
+        if rows % (br * n_pe) == 0:
+            return br
+    return 1
+
+
+# --------------------------------------------------------------------------- ops
+@functools.partial(jax.jit, static_argnames=("n_pe", "interpret"))
+def memcpy(x: jax.Array, *, n_pe: int = 1, interpret: Optional[bool] = None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    w, n, shape, dtype = to_words(x, row_multiple=n_pe)
+    br = _pick_block_rows(w.shape[0], n_pe)
+    out = _mc.memcpy_words(w, block_rows=br, n_pe=n_pe, interpret=interpret)
+    return from_words(out, n, shape, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "n_pe", "interpret"))
+def fill(
+    pattern: jax.Array, n_words: int, *, n_pe: int = 1, interpret: Optional[bool] = None
+) -> jax.Array:
+    """Fill ``n_words`` uint32 words with a repeating 1/2/4-word pattern."""
+    interpret = _interpret_default() if interpret is None else interpret
+    rows = -(-n_words // LANES)
+    rows = -(-rows // n_pe) * n_pe
+    br = _pick_block_rows(rows, n_pe)
+    out = _fill.fill_words(rows, pattern.astype(jnp.uint32), block_rows=br, n_pe=n_pe,
+                           interpret=interpret)
+    return out.reshape(-1)[:n_words]
+
+
+def fill_like(x: jax.Array, pattern_words=(0,), **kw) -> jax.Array:
+    """Engine-backed buffer (re)initialization — e.g. grad-accumulator zeroing."""
+    nbytes = x.size * x.dtype.itemsize
+    pat = jnp.asarray(pattern_words, jnp.uint32)
+    words = fill(pat, nbytes // 4, **kw)
+    return from_words(words.reshape(-1), nbytes // 4, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compare(a: jax.Array, b: jax.Array, *, interpret: Optional[bool] = None):
+    """(equal?, first-diff word index | -1) — DSA completion-record style."""
+    interpret = _interpret_default() if interpret is None else interpret
+    wa, n, _, _ = to_words(a)
+    wb, _, _, _ = to_words(b)
+    br = _pick_block_rows(wa.shape[0], 1)
+    per_block = _cmp.compare_words(wa, wb, block_rows=br, interpret=interpret)
+    counts = per_block[:, 0]
+    firsts = per_block[:, 1]
+    any_diff = counts.sum() > 0
+    block_words = br * LANES
+    idx_global = jnp.arange(per_block.shape[0]) * block_words + firsts
+    first = jnp.min(jnp.where(counts > 0, idx_global, np.iinfo(np.int32).max))
+    first = jnp.where(first >= n, -1, first)  # diff only in padding -> equal
+    real = any_diff & (first >= 0)
+    return ~real, jnp.where(real, first, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compare_pattern(a: jax.Array, pattern: jax.Array, *, interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    wa, n, _, _ = to_words(a)
+    # padding words won't match the pattern -> compare only true words via mask
+    br = _pick_block_rows(wa.shape[0], 1)
+    per_block = _cmp.compare_pattern_words(wa, pattern.astype(jnp.uint32), block_rows=br,
+                                           interpret=interpret)
+    counts, firsts = per_block[:, 0], per_block[:, 1]
+    block_words = br * LANES
+    idx_global = jnp.arange(per_block.shape[0]) * block_words + firsts
+    valid = (counts > 0) & (idx_global < n)
+    first = jnp.min(jnp.where(valid, idx_global, np.iinfo(np.int32).max))
+    real = valid.any()
+    return ~real, jnp.where(real, first, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dualcast(x: jax.Array, *, interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    w, n, shape, dtype = to_words(x)
+    br = _pick_block_rows(w.shape[0], 1)
+    d1, d2 = _dual.dualcast_words(w, block_rows=br, interpret=interpret)
+    return from_words(d1, n, shape, dtype), from_words(d2, n, shape, dtype)
+
+
+# --------------------------------------------------------------------------- crc32
+_CRC_TABLES = jnp.asarray(_ref.make_crc_tables(4))
+_SHIFT_CACHE: dict = {}
+
+
+def _shift_mat(chunk_bytes: int) -> jax.Array:
+    if chunk_bytes not in _SHIFT_CACHE:
+        _SHIFT_CACHE[chunk_bytes] = _ref.crc32_shift_matrix(chunk_bytes)  # numpy
+    return jnp.asarray(_SHIFT_CACHE[chunk_bytes])
+
+
+def _pick_chunks(n_words: int, max_chunks: int = 256) -> int:
+    c = 1
+    for cand in range(1, max_chunks + 1):
+        if n_words % cand == 0:
+            c = cand
+    return c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "max_chunks"))
+def crc32(x: jax.Array, *, interpret: Optional[bool] = None, max_chunks: int = 256) -> jax.Array:
+    """zlib-compatible CRC32 of the little-endian byte view (u32 scalar)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    flat = _bitcast_to_u32(x)
+    n_words = flat.shape[0]
+    C = _pick_chunks(n_words, max_chunks)
+    data = flat.reshape(C, n_words // C)
+    states = _crc.crc32_chunk_states(data, _CRC_TABLES, interpret=interpret)
+    if C == 1:
+        return states[0]
+    mat = _shift_mat((n_words // C) * 4)
+    return _crc.combine_chunk_crcs(states, mat)
+
+
+# --------------------------------------------------------------------------- delta records
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def delta_create(src: jax.Array, ref: jax.Array, *, cap: int = 1024,
+                 interpret: Optional[bool] = None):
+    """Fixed-capacity delta record (offsets, data, count, overflow?)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    ws, n, _, _ = to_words(src)
+    wr, _, _, _ = to_words(ref)
+    br = _pick_block_rows(ws.shape[0], 1)
+    mask, _counts = _dc.delta_mask_words(ws, wr, block_rows=br, interpret=interpret)
+    flat_mask = mask.reshape(-1)[:n] if ws.size != n else mask.reshape(-1)
+    flat_mask = mask.reshape(-1)
+    flat_mask = flat_mask & (jnp.arange(flat_mask.shape[0]) < n)
+    count = flat_mask.sum().astype(jnp.int32)
+    (idx,) = jnp.nonzero(flat_mask, size=cap, fill_value=-1)
+    src_flat = ws.reshape(-1)
+    data = jnp.where(idx >= 0, src_flat[jnp.clip(idx, 0)], 0).astype(jnp.uint32)
+    return idx.astype(jnp.int32), data, count, count > cap
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def delta_apply(ref: jax.Array, offsets: jax.Array, data: jax.Array, *,
+                interpret: Optional[bool] = None, use_kernel: bool = True) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    wr, n, shape, dtype = to_words(ref)
+    if use_kernel:
+        out = _da.delta_apply_words(wr, offsets, data, interpret=interpret)
+    else:
+        flat = wr.reshape(-1)
+        valid = offsets >= 0
+        safe = jnp.clip(offsets, 0)
+        flat = flat.at[safe].set(jnp.where(valid, data, flat[safe]))
+        out = flat.reshape(wr.shape)
+    return from_words(out, n, shape, dtype)
+
+
+# --------------------------------------------------------------------------- batch copy (paged)
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(1,))
+def batch_copy(src_pool: jax.Array, dst_pool: jax.Array, src_idx: jax.Array,
+               dst_idx: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Batch-descriptor page copy: dst_pool[dst_idx[i]] = src_pool[src_idx[i]].
+
+    Pools are [n_pages, ...page_shape...] of any dtype; pages are bit-cast to
+    word tiles internally."""
+    interpret = _interpret_default() if interpret is None else interpret
+    P = src_pool.shape[0]
+    Q = dst_pool.shape[0]
+    page_shape = src_pool.shape[1:]
+    page_words, n, _, dtype = to_words(src_pool.reshape((P,) + page_shape)[0])
+    rows = page_words.shape[0]
+
+    def pool_words(pool, k):
+        flat = _bitcast_to_u32(pool).reshape(k, -1)
+        pad = rows * LANES - flat.shape[1]
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((k, pad), jnp.uint32)], axis=1)
+        return flat.reshape(k, rows, LANES)
+
+    sw = pool_words(src_pool, P)
+    dw = pool_words(dst_pool, Q)
+    out = _bc.batch_copy_pages(sw, dw, src_idx.astype(jnp.int32), dst_idx.astype(jnp.int32),
+                               interpret=interpret)
+    flat = out.reshape(Q, -1)[:, : n]
+    itemsize = jnp.dtype(dtype).itemsize
+    if itemsize == 4:
+        res = jax.lax.bitcast_convert_type(flat, dtype).reshape((Q,) + page_shape)
+    elif itemsize < 4:
+        res = jax.lax.bitcast_convert_type(flat, dtype).reshape((Q,) + page_shape)
+    else:
+        res = jax.lax.bitcast_convert_type(flat.reshape(Q, -1, itemsize // 4), dtype).reshape(
+            (Q,) + page_shape
+        )
+    return res

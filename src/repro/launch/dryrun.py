@@ -1,0 +1,249 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with NO device allocation (ShapeDtypeStruct inputs),
+and record memory/cost/collective analysis per cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+Device-count note: the XLA_FLAGS line above MUST run before any other
+import; it only affects this entry point (smoke tests and benches see the
+real single device).
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, applicable, get_config, all_cells
+from repro.distributed.annotate import use_rules
+from repro.distributed.params import (
+    opt_state_shardings,
+    tree_shardings,
+)
+from repro.distributed.sharding import rules_for_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.api import build_model, make_batch_specs
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.roofline.analysis import (
+    V5E,
+    collective_bytes_from_hlo,
+    model_flops_for_cell,
+    roofline_terms,
+)
+
+# per-arch training knobs (memory realism at 256/512 chips)
+MICRO_STEPS = {"deepseek-67b": 8, "llama4-maverick-400b-a17b": 8}
+FSDP_ARCHS = {"llama4-maverick-400b-a17b"}
+
+
+def _attach(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), abstract, shardings
+    )
+
+
+def make_cell_rules(mesh, cfg, shape, overrides=None):
+    """Sharding rules for one cell, including the divisibility-driven
+    seq-sharded-KV fallback and FSDP for very large MoE."""
+    ov = dict(overrides or {})
+    tp = mesh.shape.get("model", 1)
+    if shape.kind in ("decode", "prefill") and cfg.num_kv_heads and cfg.num_kv_heads % tp != 0:
+        # KV heads not TP-shardable -> shard the cache sequence dim instead
+        ov.setdefault("seq", "model")
+    if cfg.name in FSDP_ARCHS:
+        # 400B params don't fit at TP16 even for serving: shard expert
+        # weights over the data axes too (weights all-gather per layer)
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        ov.setdefault("fsdp", data_axes)
+    return rules_for_mesh(mesh, overrides=ov)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, moe_dispatch="dense", zero1=True,
+               remat=True, rules_overrides=None, micro_steps=None, attn_impl="chunked",
+               no_fsdp=False, tp_comm="auto", remat_group=1, zero2=False):
+    """Build + lower one cell.  Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if no_fsdp:
+        rules_overrides = dict(rules_overrides or {})
+        rules_overrides.setdefault("fsdp", None)
+    rules = make_cell_rules(mesh, cfg, shape, rules_overrides)
+    model = build_model(cfg, mesh=mesh, moe_dispatch=moe_dispatch, remat=remat,
+                        attn_impl=attn_impl, tp_comm=tp_comm, remat_group=remat_group)
+
+    rng = jax.random.key(0)
+    params_abs = jax.eval_shape(model.init, rng)
+    params_sh = tree_shardings(params_abs, mesh, rules)
+    params_in = _attach(params_abs, params_sh)
+
+    batch_abs = make_batch_specs(cfg, shape)
+    batch_sh = tree_shardings(batch_abs, mesh, rules)
+    batch_in = _attach(batch_abs, batch_sh)
+
+    with mesh, use_rules(mesh, rules):
+        if shape.kind == "train":
+            ms = micro_steps if micro_steps is not None else MICRO_STEPS.get(arch, 1)
+            opt = AdamW(lr=cosine_schedule(3e-4, 100, 10_000))
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            opt_sh = opt_state_shardings(opt_abs, params_abs, mesh, rules, zero1=zero1)
+            step = make_train_step(model, opt, micro_steps=ms,
+                                   grad_shardings=opt_sh.m if zero2 else None)
+            opt_in = _attach(opt_abs, opt_sh)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params_in, opt_in, batch_in)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, max_cache_len=shape.seq_len)
+            lowered = jax.jit(step).lower(params_in, batch_in)
+        else:  # decode
+            step = make_decode_step(model)
+            cache_abs = jax.eval_shape(
+                functools.partial(model.init_cache, shape.global_batch, shape.seq_len)
+            )
+            cache_sh = tree_shardings(cache_abs, mesh, rules)
+            cache_in = _attach(cache_abs, cache_sh)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params_in, cache_in, batch_in["tokens"]
+            )
+    return lowered, dict(cfg=cfg, shape=shape, rules=rules)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, save_hlo: Optional[str] = None,
+                **opts) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "skip", "reason": reason}
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        t0 = time.time()
+        lowered, meta = lower_cell(arch, shape_name, mesh, **opts)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        if save_hlo:
+            import gzip
+
+            Path(save_hlo).mkdir(parents=True, exist_ok=True)
+            with gzip.open(Path(save_hlo) / f"{mesh_name}__{arch}__{shape_name}.hlo.gz",
+                           "wt") as f:
+                f.write(hlo)
+        # loop-aware cost walk (XLA's cost_analysis counts scan bodies once)
+        from repro.roofline.hlo_cost import analyze_hlo
+
+        cost = analyze_hlo(hlo)
+        flops = float(cost.flops)
+        byts = float(cost.bytes)
+        coll_total, coll_ops = cost.coll_bytes, {
+            k: dict(v) for k, v in cost.coll_ops.items()
+        }
+        terms = roofline_terms(flops, byts, coll_total)
+        mf = model_flops_for_cell(cfg, shape, shape.kind)
+        useful = mf / (flops * n_chips) if flops > 0 else 0.0
+        rec.update(
+            status="ok",
+            reason="",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_dev=flops,
+            bytes_per_dev=byts,
+            collective_bytes_per_dev=coll_total,
+            collective_ops=coll_ops,
+            model_flops_total=mf,
+            useful_flops_ratio=round(useful, 4),
+            memory=dict(
+                argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+                output_bytes=getattr(ma, "output_size_in_bytes", None),
+                temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+            ),
+            hlo_bytes=len(hlo),
+            **terms,
+        )
+        # memory_analysis is PER-DEVICE on an SPMD module (verified: argument
+        # bytes == param-shard + ZeRO opt-shard sizes); aliased outputs reuse
+        # argument space.
+        args = rec["memory"]["argument_bytes"] or 0
+        temps = rec["memory"]["temp_bytes"] or 0
+        rec["hbm_per_dev_gb"] = round((args + temps) / 1e9, 3)
+        rec["fits_hbm"] = rec["hbm_per_dev_gb"] <= V5E.hbm_bytes / 1e9
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug we record
+        rec.update(status="error", reason=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--moe-dispatch", choices=["dense", "a2a"], default="dense")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    n_ok = n_err = n_skip = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            rec = dryrun_cell(
+                arch, shape_name, mp,
+                moe_dispatch=args.moe_dispatch, zero1=not args.no_zero1,
+                save_hlo=args.save_hlo or None,
+            )
+            tag = f".{args.tag}" if args.tag else ""
+            name = f"{rec['mesh']}__{arch}__{shape_name}{tag}.json"
+            (out_dir / name).write_text(json.dumps(rec, indent=1, default=str))
+            n_ok += rec["status"] == "ok"
+            n_err += rec["status"] == "error"
+            n_skip += rec["status"] == "skip"
+            msg = rec.get("reason", "")
+            extra = (
+                f"compile={rec.get('compile_s')}s flops/dev={rec.get('flops_per_dev', 0):.3g} "
+                f"coll/dev={rec.get('collective_bytes_per_dev', 0):.3g}B "
+                f"hbm={rec.get('hbm_per_dev_gb', 0)}GB bottleneck={rec.get('bottleneck', '')}"
+                if rec["status"] == "ok"
+                else msg[:160]
+            )
+            print(f"[{rec['status']:5s}] {rec['mesh']:6s} {arch:28s} {shape_name:12s} {extra}",
+                  flush=True)
+    print(f"\nok={n_ok} error={n_err} skip={n_skip}")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

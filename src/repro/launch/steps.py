@@ -1,0 +1,67 @@
+"""pjit-able train / prefill / decode step builders.
+
+These close over a Model + optimizer and return pure functions suitable for
+``jax.jit(..., donate_argnums=...)`` under a mesh.  The dry-run lowers these
+exact functions — there is no separate "dry-run model".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.gradients import GradAccumulator, clip_by_global_norm
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    micro_steps: int = 1,
+    clip_norm: float = 1.0,
+    grad_shardings: Optional[Any] = None,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_shardings (ZeRO-2): constrain the f32 gradient tree to the
+    optimizer-moment shardings — XLA reduce-scatters the data-parallel grad
+    sync instead of all-reducing it, and the full-model f32 grad tree never
+    materializes per device (EXPERIMENTS.md §Perf cell A iter 4)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, metrics, grads = GradAccumulator.accumulate(model.loss, params, batch, micro_steps)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        if clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.zeros(())
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model, max_cache_len: int) -> Callable:
+    """(params, batch) -> (cache, next_token, lengths)."""
+
+    def prefill_step(params, batch):
+        cache, logits, lengths = model.prefill(params, batch, max_cache_len)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return cache, next_token, lengths
+
+    return prefill_step
+
+
+def make_decode_step(model, sample: bool = False) -> Callable:
+    """(params, cache, tokens) -> (next_tokens, cache).  Greedy by default."""
+
+    def decode_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, cache
+
+    return decode_step

@@ -1,0 +1,89 @@
+"""Public model API: ``build_model(cfg)`` + batch construction helpers.
+
+``make_batch_specs`` produces ShapeDtypeStructs for the dry-run (no
+allocation); ``make_batch`` produces concrete arrays for smoke tests and the
+example drivers.  Both agree on structure per (family x shape-kind).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.decoder import DecoderModel
+from repro.models.encdec import EncDecModel
+
+
+class Model(Protocol):
+    cfg: ModelConfig
+
+    def init(self, rng) -> dict: ...
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]: ...
+    def prefill(self, params, batch, max_cache_len: int): ...
+    def decode_step(self, params, cache, tokens, batch=None): ...
+    def init_cache(self, bsz: int, max_cache_len: int) -> dict: ...
+
+
+def build_model(cfg: ModelConfig, mesh=None, moe_dispatch: str = "dense",
+                remat: bool = True, attn_impl: str = "chunked",
+                tp_comm: str = "auto", remat_group: int = 1) -> Model:
+    if cfg.family == "audio":
+        return EncDecModel(cfg, mesh=mesh, remat=remat)
+    return DecoderModel(cfg, mesh=mesh, moe_dispatch=moe_dispatch, remat=remat,
+                        attn_impl=attn_impl, tp_comm=tp_comm, remat_group=remat_group)
+
+
+def _extras_specs(cfg: ModelConfig, bsz: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.vlm is not None:
+        out["patch_embeds"] = jax.ShapeDtypeStruct((bsz, cfg.vlm.num_patches, cfg.d_model), dt)
+        out["positions_thw"] = jax.ShapeDtypeStruct((3, bsz, seq), jnp.int32)
+    if cfg.encoder is not None:
+        out["frame_embeds"] = jax.ShapeDtypeStruct((bsz, cfg.encoder.source_len, cfg.d_model), dt)
+    return out
+
+
+def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for one cell.  For decode cells the KV cache itself is
+    part of the input spec (donated in real serving)."""
+    bsz, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((bsz, S), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((bsz, S), jnp.float32),
+        }
+        specs.update(_extras_specs(cfg, bsz, S))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((bsz, S), jnp.int32)}
+        specs.update(_extras_specs(cfg, bsz, S))
+        return specs
+    # decode: one new token against a cache of length S
+    specs = {"tokens": jax.ShapeDtypeStruct((bsz, 1), jnp.int32)}
+    return specs
+
+
+def make_batch(cfg: ModelConfig, bsz: int, seq: int, rng, kind: str = "train") -> Dict[str, Any]:
+    """Concrete small batch for smoke tests / examples."""
+    k1, k2 = jax.random.split(rng)
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {
+        "tokens": jax.random.randint(k1, (bsz, seq), 0, cfg.vocab_size, dtype=jnp.int32)
+    }
+    if kind == "train":
+        batch["loss_mask"] = jnp.ones((bsz, seq), jnp.float32)
+    if cfg.vlm is not None:
+        npch = min(cfg.vlm.num_patches, max(seq - 2, 1))
+        batch["patch_embeds"] = jax.random.normal(k2, (bsz, npch, cfg.d_model)).astype(dt) * 0.02
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], (bsz, seq))
+        batch["positions_thw"] = jnp.stack([pos, pos, pos])
+        if kind == "train":
+            batch["loss_mask"] = batch["loss_mask"].at[:, 1 : 1 + npch].set(0.0)
+    if cfg.encoder is not None:
+        batch["frame_embeds"] = (
+            jax.random.normal(k2, (bsz, cfg.encoder.source_len, cfg.d_model)).astype(dt) * 0.02
+        )
+    return batch

@@ -1,0 +1,329 @@
+"""Transformer / SSM / hybrid block definitions.
+
+Each block is a pair of pure functions:
+
+* ``init_*_layer(rng, cfg, ...) -> params``  (single layer)
+* ``apply_*(x, p, ctx, mode, cache) -> (x, aux, new_cache)``
+
+``mode`` is one of "train" | "prefill" | "decode".  Caches are dicts of
+arrays; in "prefill" the block writes a fresh cache, in "decode" it updates
+one token in place.  All blocks are scan-compatible (uniform pytrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.annotate import ann
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through blocks (static + traced values)."""
+
+    cfg: ModelConfig
+    mesh: Any = None
+    # rope tables: [B, S, hd//2] (train/prefill) or [B, 1, hd//2] (decode)
+    cos_local: Any = None
+    sin_local: Any = None
+    cos_global: Any = None
+    sin_global: Any = None
+    lengths: Any = None  # [B] int32, tokens already in cache (decode)
+    n_meta: int = 0
+    moe_dispatch: str = "dense"
+    max_cache_len: int = 0
+    window: int = 0
+    remat: bool = True
+    causal: bool = True  # False for encoder stacks
+    attn_impl: str = "chunked"  # "chunked" (baseline) | "flash" (Pallas)
+    tp_comm: str = "auto"  # "auto" (GSPMD) | "manual_bf16" (shard_map TP, bf16 wire)
+
+    def rope(self, layer_type: str):
+        if layer_type == "global" and self.cos_global is not None:
+            return self.cos_global, self.sin_global
+        return self.cos_local, self.sin_local
+
+
+# --------------------------------------------------------------------------- init helpers
+def _dense(rng, shape, dtype, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def init_attn_params(rng, cfg: ModelConfig, dtype) -> dict:
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    k = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense(k[0], (D, H * hd), dtype),
+        "wk": _dense(k[1], (D, KV * hd), dtype),
+        "wv": _dense(k[2], (D, KV * hd), dtype),
+        "wo": _dense(k[3], (H * hd, D), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def init_mlp_params(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k = jax.random.split(rng, 3)
+    return {
+        "w1": _dense(k[0], (d_model, d_ff), dtype),
+        "w3": _dense(k[1], (d_model, d_ff), dtype),
+        "w2": _dense(k[2], (d_ff, d_model), dtype),
+    }
+
+
+# --------------------------------------------------------------------------- attention sub-block
+def _init_attn_cache(cfg: ModelConfig, B: int, layer_type: str, ctx: Ctx, dtype) -> dict:
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    if layer_type == "local" and ctx.window > 0:
+        Sc = ctx.n_meta + ctx.window
+        return {
+            "k": jnp.zeros((B, Sc, KV, hd), dtype),
+            "v": jnp.zeros((B, Sc, KV, hd), dtype),
+            "pos": jnp.full((B, Sc), -1, jnp.int32),
+        }
+    Sc = ctx.max_cache_len
+    return {
+        "k": jnp.zeros((B, Sc, KV, hd), dtype),
+        "v": jnp.zeros((B, Sc, KV, hd), dtype),
+    }
+
+
+def attn_sub(
+    x: jax.Array,
+    p: dict,
+    ctx: Ctx,
+    layer_type: str,
+    mode: str,
+    cache: Optional[dict],
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention sub-block (no residual/norm).  x [B,S,D] or [B,1,D]."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qk_p = {"q_norm": p["q_norm"], "k_norm": p["k_norm"]} if cfg.qk_norm else None
+    q, k, v = L.project_qkv(x, p, cfg, qk_norm_p=qk_p)
+    cos, sin = ctx.rope(layer_type)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    window = ctx.window if layer_type == "local" else 0
+
+    if mode in ("train", "prefill"):
+        o = L.attention_trainable(
+            q, k, v, causal=ctx.causal, window=window, n_meta=ctx.n_meta, impl=ctx.attn_impl
+        )
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _write_prefill_cache(cfg, ctx, layer_type, k, v)
+    else:  # decode: S == 1
+        new_cache, k_all, v_all, valid = _decode_cache_update(
+            cfg, ctx, layer_type, cache, k[:, 0], v[:, 0]
+        )
+        o = L.decode_attention(q[:, 0], k_all, v_all, valid)[:, None]
+    o = ann(o, "batch", None, "heads", None)
+    out = L.row_parallel_out(o.reshape(B, S, H * hd), p["wo"], ctx.tp_comm)
+    return out, new_cache
+
+
+def _write_prefill_cache(cfg: ModelConfig, ctx: Ctx, layer_type: str, k, v) -> dict:
+    B, S = k.shape[0], k.shape[1]
+    dtype = k.dtype
+    if layer_type == "local" and ctx.window > 0:
+        n_meta, W = ctx.n_meta, ctx.window
+        Sc = n_meta + W
+        ck = jnp.zeros((B, Sc, k.shape[2], k.shape[3]), dtype)
+        cv = jnp.zeros_like(ck)
+        cpos = jnp.full((B, Sc), -1, jnp.int32)
+        if n_meta > 0:
+            ck = ck.at[:, :n_meta].set(k[:, :n_meta])
+            cv = cv.at[:, :n_meta].set(v[:, :n_meta])
+            cpos = cpos.at[:, :n_meta].set(jnp.arange(n_meta)[None])
+        body_len = S - n_meta
+        take = min(W, body_len)
+        # absolute positions of the last `take` body tokens
+        pos = jnp.arange(S - take, S)
+        slots = n_meta + (pos - n_meta) % W
+        ck = ck.at[:, slots].set(k[:, S - take :])
+        cv = cv.at[:, slots].set(v[:, S - take :])
+        cpos = cpos.at[:, slots].set(pos[None])
+        return {"k": ck, "v": cv, "pos": cpos}
+    Sc = ctx.max_cache_len
+    ck = jnp.zeros((B, Sc, k.shape[2], k.shape[3]), dtype)
+    cv = jnp.zeros_like(ck)
+    ck = ck.at[:, :S].set(k)
+    cv = cv.at[:, :S].set(v)
+    ck = ann(ck, "batch", "seq", "kv_heads", None)
+    cv = ann(cv, "batch", "seq", "kv_heads", None)
+    return {"k": ck, "v": cv}
+
+
+def _decode_cache_update(cfg, ctx: Ctx, layer_type: str, cache: dict, k1, v1):
+    """k1/v1 [B, KV, hd] for the current token at position ctx.lengths."""
+    B = k1.shape[0]
+    bidx = jnp.arange(B)
+    pos = ctx.lengths  # [B]
+    if layer_type == "local" and ctx.window > 0:
+        n_meta, W = ctx.n_meta, ctx.window
+        slot = jnp.where(pos < n_meta, pos, n_meta + (pos - n_meta) % W)
+        ck = cache["k"].at[bidx, slot].set(k1)
+        cv = cache["v"].at[bidx, slot].set(v1)
+        cpos = cache["pos"].at[bidx, slot].set(pos)
+        in_window = (pos[:, None] - cpos) < W
+        is_meta = (cpos >= 0) & (cpos < n_meta)
+        valid = (cpos >= 0) & (cpos <= pos[:, None]) & (in_window | is_meta)
+        return {"k": ck, "v": cv, "pos": cpos}, ck, cv, valid
+    ck = cache["k"].at[bidx, pos].set(k1)
+    cv = cache["v"].at[bidx, pos].set(v1)
+    ck = ann(ck, "batch", "seq", "kv_heads", None)
+    cv = ann(cv, "batch", "seq", "kv_heads", None)
+    valid = jnp.arange(ck.shape[1])[None] <= pos[:, None]
+    return {"k": ck, "v": cv}, ck, cv, valid
+
+
+# --------------------------------------------------------------------------- full blocks
+def init_dense_layer(rng, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    k = jax.random.split(rng, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attn_params(k[0], cfg, dtype),
+        "mlp": init_mlp_params(k[1], cfg.d_model, d_ff or cfg.d_ff, dtype),
+    }
+
+
+def apply_dense(x, p, ctx: Ctx, layer_type: str, mode: str, cache=None):
+    h, new_cache = attn_sub(L.rms_norm(x, p["ln1"], ctx.cfg.norm_eps), p["attn"], ctx, layer_type, mode, cache)
+    x = x + h
+    x = x + L.gated_mlp(L.rms_norm(x, p["ln2"], ctx.cfg.norm_eps), p["mlp"], ctx.cfg.act,
+                        tp_comm=ctx.tp_comm)
+    x = ann(x, "batch", None, "embed")
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def init_moe_layer(rng, cfg: ModelConfig, dtype) -> dict:
+    k = jax.random.split(rng, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attn_params(k[0], cfg, dtype),
+        "moe": moe_lib.init_moe_params(k[1], cfg.moe, cfg.d_model, dtype),
+    }
+
+
+def apply_moe(x, p, ctx: Ctx, layer_type: str, mode: str, cache=None):
+    h, new_cache = attn_sub(L.rms_norm(x, p["ln1"], ctx.cfg.norm_eps), p["attn"], ctx, layer_type, mode, cache)
+    x = x + h
+    y, aux = moe_lib.moe_block(
+        L.rms_norm(x, p["ln2"], ctx.cfg.norm_eps),
+        p["moe"],
+        ctx.cfg.moe,
+        ctx.cfg.act,
+        dispatch=ctx.moe_dispatch,
+        mesh=ctx.mesh,
+    )
+    x = x + y
+    x = ann(x, "batch", None, "embed")
+    return x, aux, new_cache
+
+
+def init_ssm_layer(rng, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "mixer": ssm_lib.init_mamba2_params(rng, cfg.ssm, cfg.d_model, dtype),
+    }
+
+
+def _init_ssm_cache(cfg: ModelConfig, B: int, ssm_cfg, dtype) -> dict:
+    H = ssm_cfg.n_heads(cfg.d_model)
+    return {
+        "ssm_state": jnp.zeros((B, H, ssm_cfg.head_dim, ssm_cfg.d_state), jnp.float32),
+        "conv_state": jnp.zeros(
+            (B, ssm_cfg.d_conv - 1, ssm_cfg.d_inner(cfg.d_model) + 2 * ssm_cfg.n_groups * ssm_cfg.d_state),
+            dtype,
+        ),
+    }
+
+
+def apply_ssm(x, p, ctx: Ctx, layer_type: str, mode: str, cache=None):
+    cfg = ctx.cfg
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mode == "train":
+        y = ssm_lib.mamba2_mixer(xn, p["mixer"], cfg.ssm, cfg.d_model)
+        return x + y, jnp.zeros((), jnp.float32), None
+    if mode == "prefill":
+        y, state, conv_state = ssm_lib.mamba2_mixer_with_state(xn, p["mixer"], cfg.ssm, cfg.d_model)
+        return x + y, jnp.zeros((), jnp.float32), {"ssm_state": state, "conv_state": conv_state}
+    # decode
+    y, state, conv_state = ssm_lib.mamba2_decode_step(
+        xn[:, 0], cache["ssm_state"], cache["conv_state"], p["mixer"], cfg.ssm, cfg.d_model
+    )
+    return x + y[:, None], jnp.zeros((), jnp.float32), {"ssm_state": state, "conv_state": conv_state}
+
+
+def init_hybrid_layer(rng, cfg: ModelConfig, dtype) -> dict:
+    k = jax.random.split(rng, 3)
+    di = cfg.hybrid.ssm.d_inner(cfg.d_model)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attn_params(k[0], cfg, dtype),
+        "mixer": ssm_lib.init_mamba2_params(k[1], cfg.hybrid.ssm, cfg.d_model, dtype),
+        "attn_out_norm": jnp.zeros((cfg.d_model,), dtype),
+        "ssm_out_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp_params(k[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def apply_hybrid(x, p, ctx: Ctx, layer_type: str, mode: str, cache=None):
+    """Hymba: attention heads and SSM heads run in PARALLEL on the same input;
+    outputs are normalized and averaged (arXiv:2411.13676)."""
+    cfg = ctx.cfg
+    xn = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a_cache = cache.get("attn") if cache else None
+    attn_out, new_a_cache = attn_sub(xn, p["attn"], ctx, layer_type, mode, a_cache)
+    new_cache: Optional[dict] = None
+    if mode == "train":
+        ssm_out = ssm_lib.mamba2_mixer(xn, p["mixer"], cfg.hybrid.ssm, cfg.d_model)
+    elif mode == "prefill":
+        ssm_out, state, conv_state = ssm_lib.mamba2_mixer_with_state(
+            xn, p["mixer"], cfg.hybrid.ssm, cfg.d_model
+        )
+        new_cache = {"attn": new_a_cache, "ssm": {"ssm_state": state, "conv_state": conv_state}}
+    else:
+        s_cache = cache["ssm"]
+        y1, state, conv_state = ssm_lib.mamba2_decode_step(
+            xn[:, 0], s_cache["ssm_state"], s_cache["conv_state"], p["mixer"], cfg.hybrid.ssm, cfg.d_model
+        )
+        ssm_out = y1[:, None]
+        new_cache = {"attn": new_a_cache, "ssm": {"ssm_state": state, "conv_state": conv_state}}
+    h = 0.5 * (
+        L.rms_norm(attn_out, p["attn_out_norm"], cfg.norm_eps)
+        + L.rms_norm(ssm_out, p["ssm_out_norm"], cfg.norm_eps)
+    )
+    x = x + h
+    x = x + L.gated_mlp(L.rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"], cfg.act,
+                        tp_comm=ctx.tp_comm)
+    x = ann(x, "batch", None, "embed")
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def init_block_cache(cfg: ModelConfig, B: int, layer_type: str, ctx: Ctx, dtype) -> dict:
+    """Cache structure for one layer (matches what prefill/decode produce)."""
+    if cfg.family == "ssm":
+        return _init_ssm_cache(cfg, B, cfg.ssm, dtype)
+    if cfg.family == "hybrid":
+        return {
+            "attn": _init_attn_cache(cfg, B, layer_type, ctx, dtype),
+            "ssm": _init_ssm_cache(cfg, B, cfg.hybrid.ssm, dtype),
+        }
+    return _init_attn_cache(cfg, B, layer_type, ctx, dtype)

@@ -1,0 +1,480 @@
+"""Decoder-stack model assembly for all decoder-only families:
+dense (llama), gemma3 (periodic local:global), MoE (llama4 / deepseek-moe),
+SSM (mamba2), hybrid (hymba), VLM (qwen2-vl).
+
+The stack is a list of *segments*; each segment is either scanned
+(homogeneous layers, stacked params — keeps HLO size flat in depth) or
+unrolled (irregular stacks: hymba; leading dense layer of deepseek-moe;
+gemma3's trailing partial period).
+
+All entry points are pure functions of (params, batch) suitable for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.annotate import ann
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentDef:
+    kind: str  # "scan" | "unroll"
+    unit: str  # "dense" | "moe" | "ssm" | "hybrid" | "gemma_period"
+    n: int  # units (layers, or periods for gemma_period)
+    layer_types: Tuple[str, ...]  # per unit; for gemma_period: per-slot inside period
+    d_ff: Optional[int] = None  # override (deepseek-moe leading dense layer)
+
+
+def build_segments(cfg: ModelConfig) -> List[SegmentDef]:
+    lt = cfg.layer_types()
+    if cfg.family == "ssm":
+        return [SegmentDef("scan", "ssm", cfg.num_layers, ("global",) * cfg.num_layers)]
+    if cfg.family == "hybrid":
+        # split the irregular stack into runs of one layer type: globals
+        # (first/middle/last) unroll; the long local runs scan.  Order is
+        # preserved; per-type caches keep full-length KV only where needed.
+        segs: List[SegmentDef] = []
+        i = 0
+        while i < len(lt):
+            j = i
+            while j < len(lt) and lt[j] == lt[i]:
+                j += 1
+            kind = "scan" if (j - i) >= 3 else "unroll"
+            segs.append(SegmentDef(kind, "hybrid", j - i, lt[i:j]))
+            i = j
+        return segs
+    if cfg.family == "moe":
+        if cfg.moe.moe_every == 2:
+            # llama4-style interleave: scan over (dense, moe) periods
+            assert cfg.num_layers % 2 == 0 and cfg.moe.first_moe_layer == 1
+            return [
+                SegmentDef("scan", "moe_period", cfg.num_layers // 2, ("global", "global"))
+            ]
+        segs = []
+        lead = cfg.moe.first_moe_layer
+        if lead > 0:
+            segs.append(
+                SegmentDef("unroll", "dense", lead, lt[:lead], d_ff=cfg.moe.d_ff_dense or cfg.d_ff)
+            )
+        n_moe = cfg.num_layers - lead
+        segs.append(SegmentDef("scan", "moe", n_moe, lt[lead:]))
+        return segs
+    if cfg.attn_pattern == "gemma3":
+        period = cfg.local_per_period + 1
+        n_periods = cfg.num_layers // period
+        trail = cfg.num_layers - n_periods * period
+        segs = []
+        if n_periods > 0:
+            segs.append(
+                SegmentDef(
+                    "scan", "gemma_period", n_periods,
+                    ("local",) * cfg.local_per_period + ("global",),
+                )
+            )
+        if trail:
+            segs.append(SegmentDef("unroll", "dense", trail, lt[-trail:]))
+        return segs
+    # dense / vlm
+    return [SegmentDef("scan", "dense", cfg.num_layers, lt)]
+
+
+# --------------------------------------------------------------------------- unit init/apply
+def _unit_init(seg: SegmentDef, cfg: ModelConfig, dtype):
+    if seg.unit == "dense":
+        return lambda r: B.init_dense_layer(r, cfg, dtype, d_ff=seg.d_ff)
+    if seg.unit == "moe":
+        return lambda r: B.init_moe_layer(r, cfg, dtype)
+    if seg.unit == "ssm":
+        return lambda r: B.init_ssm_layer(r, cfg, dtype)
+    if seg.unit == "hybrid":
+        return lambda r: B.init_hybrid_layer(r, cfg, dtype)
+    if seg.unit == "gemma_period":
+
+        def init_period(r):
+            ks = jax.random.split(r, cfg.local_per_period + 1)
+            locals_p = jax.vmap(lambda k: B.init_dense_layer(k, cfg, dtype))(
+                ks[: cfg.local_per_period]
+            )
+            return {"locals": locals_p, "global": B.init_dense_layer(ks[-1], cfg, dtype)}
+
+        return init_period
+    if seg.unit == "moe_period":
+
+        def init_moe_period(r):
+            k1, k2 = jax.random.split(r)
+            return {
+                "dense": B.init_dense_layer(k1, cfg, dtype, d_ff=cfg.moe.d_ff_dense or cfg.d_ff),
+                "moe": B.init_moe_layer(k2, cfg, dtype),
+            }
+
+        return init_moe_period
+    raise ValueError(seg.unit)
+
+
+def _unit_apply(seg: SegmentDef, x, p, ctx: B.Ctx, layer_type: str, mode: str, cache):
+    if seg.unit == "dense":
+        return B.apply_dense(x, p, ctx, layer_type, mode, cache)
+    if seg.unit == "moe":
+        return B.apply_moe(x, p, ctx, layer_type, mode, cache)
+    if seg.unit == "ssm":
+        return B.apply_ssm(x, p, ctx, layer_type, mode, cache)
+    if seg.unit == "hybrid":
+        return B.apply_hybrid(x, p, ctx, layer_type, mode, cache)
+    if seg.unit == "gemma_period":
+        aux_total = jnp.zeros((), jnp.float32)
+        new_local_caches = []
+        nl = len(seg.layer_types) - 1
+        for i in range(nl):
+            p_i = jax.tree.map(lambda a: a[i], p["locals"])
+            c_i = None if cache is None else jax.tree.map(lambda a: a[i], cache["locals"])
+            x, aux, nc = B.apply_dense(x, p_i, ctx, "local", mode, c_i)
+            aux_total += aux
+            new_local_caches.append(nc)
+        c_g = None if cache is None else cache["global"]
+        x, aux, nc_g = B.apply_dense(x, p["global"], ctx, "global", mode, c_g)
+        aux_total += aux
+        new_cache = None
+        if nc_g is not None or any(c is not None for c in new_local_caches):
+            new_cache = {
+                "locals": jax.tree.map(lambda *a: jnp.stack(a), *new_local_caches),
+                "global": nc_g,
+            }
+        return x, aux_total, new_cache
+    if seg.unit == "moe_period":
+        c_d = None if cache is None else cache["dense"]
+        c_m = None if cache is None else cache["moe"]
+        x, aux1, nc_d = B.apply_dense(x, p["dense"], ctx, "global", mode, c_d)
+        x, aux2, nc_m = B.apply_moe(x, p["moe"], ctx, "global", mode, c_m)
+        new_cache = None
+        if nc_d is not None or nc_m is not None:
+            new_cache = {"dense": nc_d, "moe": nc_m}
+        return x, aux1 + aux2, new_cache
+    raise ValueError(seg.unit)
+
+
+def _unit_cache(seg: SegmentDef, cfg: ModelConfig, bsz: int, ctx: B.Ctx, dtype):
+    if seg.unit == "gemma_period":
+        nl = len(seg.layer_types) - 1
+        local = B.init_block_cache(cfg, bsz, "local", ctx, dtype)
+        return {
+            "locals": jax.tree.map(lambda a: jnp.stack([a] * nl), local),
+            "global": B.init_block_cache(cfg, bsz, "global", ctx, dtype),
+        }
+    if seg.unit == "moe_period":
+        g = B.init_block_cache(cfg, bsz, "global", ctx, dtype)
+        return {"dense": g, "moe": jax.tree.map(jnp.array, g)}
+    # NOTE: for unroll segments callers index by layer; layer_type varies
+    return None  # handled per-layer by callers
+
+
+# --------------------------------------------------------------------------- model
+class DecoderModel:
+    def __init__(self, cfg: ModelConfig, mesh=None, moe_dispatch: str = "dense",
+                 remat: bool = True, attn_impl: str = "chunked", tp_comm: str = "auto",
+                 remat_group: int = 1):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.moe_dispatch = moe_dispatch
+        self.remat = remat
+        self.attn_impl = attn_impl
+        self.tp_comm = tp_comm
+        self.remat_group = remat_group
+        self.segments = build_segments(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_meta = cfg.hybrid.num_meta_tokens if cfg.hybrid is not None else 0
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        k_emb, k_seg, k_out, k_meta = jax.random.split(rng, 4)
+        params: Dict[str, Any] = {
+            "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "segments": [],
+        }
+        seg_keys = jax.random.split(k_seg, len(self.segments))
+        for seg, sk in zip(self.segments, seg_keys):
+            init_fn = _unit_init(seg, cfg, dtype)
+            if seg.kind == "scan":
+                params["segments"].append(jax.vmap(init_fn)(jax.random.split(sk, seg.n)))
+            else:
+                lks = jax.random.split(sk, seg.n)
+                params["segments"].append([init_fn(lk) for lk in lks])
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(k_out, (cfg.d_model, cfg.vocab_size)) * 0.02
+            ).astype(dtype)
+        if self.n_meta:
+            params["meta_tokens"] = (
+                jax.random.normal(k_meta, (self.n_meta, cfg.d_model)) * 0.02
+            ).astype(dtype)
+        return params
+
+    # ------------------------------------------------------------------ ctx
+    def _make_ctx(self, mode: str, positions, max_cache_len: int = 0, lengths=None, positions_thw=None) -> B.Ctx:
+        cfg = self.cfg
+        ctx = B.Ctx(
+            cfg=cfg,
+            mesh=self.mesh,
+            lengths=lengths,
+            n_meta=self.n_meta,
+            moe_dispatch=self.moe_dispatch,
+            max_cache_len=max_cache_len,
+            window=cfg.window_size,
+            remat=self.remat,
+            attn_impl=self.attn_impl,
+            tp_comm=self.tp_comm,
+        )
+        if cfg.family == "ssm":
+            return ctx
+        if cfg.vlm is not None and positions_thw is not None:
+            cos, sin = L.mrope_cos_sin(
+                positions_thw, cfg.head_dim, cfg.rope_theta, cfg.vlm.mrope_sections
+            )
+        else:
+            cos, sin = L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+        ctx = dataclasses.replace(ctx, cos_local=cos, sin_local=sin)
+        if cfg.rope_theta_global:
+            cg, sg = L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta_global)
+            ctx = dataclasses.replace(ctx, cos_global=cg, sin_global=sg)
+        return ctx
+
+    # ------------------------------------------------------------------ embedding
+    def _embed(self, params, tokens, batch) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.dtype)
+        if cfg.attn_pattern == "gemma3":  # gemma scales embeddings
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), self.dtype)
+        if cfg.vlm is not None and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(self.dtype)
+            x = jax.lax.dynamic_update_slice_in_dim(x, pe, 1, axis=1)
+        if self.n_meta:
+            meta = jnp.broadcast_to(
+                params["meta_tokens"][None], (x.shape[0], self.n_meta, cfg.d_model)
+            ).astype(self.dtype)
+            x = jnp.concatenate([meta, x], axis=1)
+        return ann(x, "batch", None, "embed")
+
+    def _unembed_w(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"], True
+        return params["unembed"], False
+
+    # ------------------------------------------------------------------ stack walk
+    def _run_stack(self, params, x, ctx: B.Ctx, mode: str, cache=None):
+        """Returns (x, aux_total, new_cache)."""
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: List[Any] = []
+        cache_segs = cache["segments"] if cache is not None else [None] * len(self.segments)
+        for si, (seg, p_seg) in enumerate(zip(self.segments, params["segments"])):
+            c_seg = cache_segs[si]
+            if seg.kind == "scan":
+                lt = seg.layer_types[0] if seg.unit != "gemma_period" else "period"
+
+                if mode == "train":
+
+                    def body(carry, p_l, seg=seg):
+                        xx, aux = carry
+                        xx, a, _ = _unit_apply(seg, xx, p_l, ctx, seg.layer_types[0], "train", None)
+                        return (xx, aux + a), None
+
+                    group = self.remat_group
+                    if ctx.remat and group > 1 and seg.n % group == 0:
+                        # nested remat: save only every `group`-th residual
+                        # (sqrt-style checkpointing) — bwd recomputes a
+                        # group chain instead of holding 1 residual/layer
+                        # (EXPERIMENTS.md §Perf cell A iter 3)
+                        grouped = jax.tree.map(
+                            lambda a: a.reshape((seg.n // group, group) + a.shape[1:]), p_seg
+                        )
+
+                        def group_body(carry, p_g):
+                            c, _ = jax.lax.scan(body, carry, p_g)
+                            return c, None
+
+                        (x, aux_total), _ = jax.lax.scan(
+                            jax.checkpoint(group_body, policy=None), (x, aux_total), grouped
+                        )
+                    else:
+                        body_fn = jax.checkpoint(body, policy=None) if ctx.remat else body
+                        (x, aux_total), _ = jax.lax.scan(
+                            lambda c, p: body_fn(c, p), (x, aux_total), p_seg
+                        )
+                    new_cache.append(None)
+                elif mode == "prefill":
+
+                    def body(xx, p_l, seg=seg):
+                        xx, a, nc = _unit_apply(seg, xx, p_l, ctx, seg.layer_types[0], "prefill", None)
+                        return xx, nc
+
+                    x, nc = jax.lax.scan(body, x, p_seg)
+                    new_cache.append(nc)
+                else:  # decode
+                    # cache rides in the CARRY with per-layer dynamic slice /
+                    # update-slice, so XLA keeps ONE aliased buffer instead of
+                    # double-buffering xs+ys stacks (halves decode HBM
+                    # residency — EXPERIMENTS.md §Perf cell C iter 3)
+
+                    def body(carry, p_l, seg=seg):
+                        xx, cache_stack, li = carry
+                        c_l = jax.tree.map(
+                            lambda a: jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False),
+                            cache_stack,
+                        )
+                        xx, a, nc = _unit_apply(seg, xx, p_l, ctx, seg.layer_types[0], "decode", c_l)
+                        cache_stack = jax.tree.map(
+                            lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                                a, n.astype(a.dtype), li, 0
+                            ),
+                            cache_stack, nc,
+                        )
+                        return (xx, cache_stack, li + 1), None
+
+                    (x, nc, _), _ = jax.lax.scan(
+                        body, (x, c_seg, jnp.zeros((), jnp.int32)), p_seg
+                    )
+                    new_cache.append(nc)
+            else:  # unroll
+                seg_caches = []
+                for li in range(seg.n):
+                    p_l = p_seg[li]
+                    c_l = None if c_seg is None else c_seg[li]
+                    lt = seg.layer_types[li]
+                    apply = lambda xx, pp, cc, lt=lt, seg=seg: _unit_apply(seg, xx, pp, ctx, lt, mode, cc)
+                    if mode == "train" and ctx.remat:
+                        xx, a, nc = jax.checkpoint(apply)(x, p_l, c_l)
+                    else:
+                        xx, a, nc = apply(x, p_l, c_l)
+                    x = xx
+                    aux_total += a
+                    seg_caches.append(nc)
+                new_cache.append(seg_caches if mode != "train" else None)
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        return x, aux_total, ({"segments": new_cache} if mode != "train" else None)
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S + self.n_meta)[None], (bsz, S + self.n_meta))
+        ctx = self._make_ctx("train", positions, positions_thw=batch.get("positions_thw"))
+        x = self._embed(params, tokens, batch)
+        x, aux, _ = self._run_stack(params, x, ctx, "train")
+        if self.n_meta:
+            x = x[:, self.n_meta :]
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(tokens, jnp.float32) if mask is None else mask.astype(jnp.float32)
+        mask = mask.at[:, -1].set(0.0)
+        w, transpose = self._unembed_w(params)
+        ce = _chunked_ce(x, w, transpose, labels, mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ prefill / decode
+    def prefill(self, params, batch, max_cache_len: int) -> Tuple[dict, jax.Array, jax.Array]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, S = tokens.shape
+        total = S + self.n_meta
+        positions = jnp.broadcast_to(jnp.arange(total)[None], (bsz, total))
+        ctx = self._make_ctx(
+            "prefill", positions, max_cache_len=max_cache_len + self.n_meta,
+            positions_thw=batch.get("positions_thw"),
+        )
+        x = self._embed(params, tokens, batch)
+        x, _, cache = self._run_stack(params, x, ctx, "prefill")
+        w, transpose = self._unembed_w(params)
+        last_logits = L.unembed(x[:, -1], w, transpose)
+        lengths = jnp.full((bsz,), total, jnp.int32)
+        cache["lengths"] = lengths
+        return cache, last_logits, lengths
+
+    def init_cache(self, bsz: int, max_cache_len: int) -> dict:
+        ctx = B.Ctx(
+            cfg=self.cfg,
+            n_meta=self.n_meta,
+            window=self.cfg.window_size,
+            max_cache_len=max_cache_len + self.n_meta,
+        )
+        segs = []
+        for seg in self.segments:
+            if seg.kind == "scan":
+                if seg.unit in ("gemma_period", "moe_period"):
+                    c = _unit_cache(seg, self.cfg, bsz, ctx, self.dtype)
+                else:
+                    c = B.init_block_cache(self.cfg, bsz, seg.layer_types[0], ctx, self.dtype)
+                segs.append(jax.tree.map(lambda a: jnp.stack([a] * seg.n), c))
+            else:
+                segs.append(
+                    [
+                        B.init_block_cache(self.cfg, bsz, seg.layer_types[i], ctx, self.dtype)
+                        for i in range(seg.n)
+                    ]
+                )
+        return {"segments": segs, "lengths": jnp.zeros((bsz,), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens, batch=None) -> Tuple[jax.Array, dict]:
+        """tokens [B, 1]; cache from prefill/init_cache.  Returns (logits [B,V], cache)."""
+        cfg = self.cfg
+        bsz = tokens.shape[0]
+        lengths = cache["lengths"]
+        positions = lengths[:, None]
+        positions_thw = None
+        if cfg.vlm is not None:
+            positions_thw = jnp.broadcast_to(positions[None], (3, bsz, 1))
+        ctx = self._make_ctx(
+            "decode",
+            positions,
+            max_cache_len=0,
+            lengths=lengths,
+            positions_thw=positions_thw,
+        )
+        x = params["embed"][tokens].astype(self.dtype)
+        if cfg.attn_pattern == "gemma3":
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), self.dtype)
+        x = ann(x, "batch", None, "embed")
+        x, _, new_cache = self._run_stack(params, x, ctx, "decode", cache)
+        w, transpose = self._unembed_w(params)
+        logits = L.unembed(x[:, 0], w, transpose)
+        new_cache["lengths"] = lengths + 1
+        return logits, new_cache
+
+
+# --------------------------------------------------------------------------- chunked CE
+def _chunked_ce(x, w, transpose, labels, mask, target_tokens: int = 16384):
+    """Cross-entropy without materializing [B, S, V] logits: scan over
+    sequence chunks, recomputing logits in the backward pass."""
+    bsz, S, D = x.shape
+    chunk = max(1, min(S, target_tokens // max(bsz, 1)))
+    while S % chunk != 0:
+        chunk -= 1
+    n = S // chunk
+    if n <= 1:
+        logits = L.unembed(x, w, transpose)
+        return L.cross_entropy(logits, labels, mask)
+
+    xs = (
+        x.reshape(bsz, n, chunk, D).transpose(1, 0, 2, 3),
+        labels.reshape(bsz, n, chunk).transpose(1, 0, 2),
+        mask.reshape(bsz, n, chunk).transpose(1, 0, 2),
+    )
+
+    def body(carry, inp):
+        xb, lb, mb = inp
+        logits = L.unembed(xb, w, transpose)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return carry + ((logz - gold) * mb).sum(), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32), xs)
+    return total / jnp.maximum(mask.sum(), 1.0)

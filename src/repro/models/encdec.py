@@ -1,0 +1,218 @@
+"""Encoder-decoder model (seamless-m4t): bidirectional encoder over stub
+frame embeddings + causal decoder with cross-attention.
+
+The speech frontend is a STUB per the assignment: ``frame_embeds``
+[B, source_len, d_model] arrive precomputed.  The decoder is the part that
+serves: decode shapes exercise its self-attention KV cache (the cross-KV is
+computed once at prefill and static thereafter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.annotate import ann
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+def _init_cross_layer(rng, cfg: ModelConfig, dtype) -> dict:
+    k = jax.random.split(rng, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "lnx": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": B.init_attn_params(k[0], cfg, dtype),
+        "xattn": B.init_attn_params(k[1], cfg, dtype),
+        "mlp": B.init_mlp_params(k[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+    p["xattn"].pop("q_norm", None)
+    p["xattn"].pop("k_norm", None)
+    return p
+
+
+def _cross_attend(x, p, cfg, ck, cv):
+    """q from x, against precomputed cross k/v (no rope, not causal)."""
+    bsz, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(bsz, S, H, hd)
+    q = ann(q, "batch", None, "heads", None)
+    o = L.attention(q, ck, cv, causal=False)
+    return o.reshape(bsz, S, H * hd) @ p["wo"]
+
+
+def _cross_kv(enc_out, p, cfg):
+    bsz, Skv, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    ck = (enc_out @ p["wk"]).reshape(bsz, Skv, KV, hd)
+    cv = (enc_out @ p["wv"]).reshape(bsz, Skv, KV, hd)
+    return ann(ck, "batch", None, "kv_heads", None), ann(cv, "batch", None, "kv_heads", None)
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, mesh=None, remat: bool = True, **_):
+        assert cfg.encoder is not None
+        self.cfg = cfg
+        self.mesh = mesh
+        self.remat = remat
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        k = jax.random.split(rng, 5)
+        enc_layers = jax.vmap(lambda r: B.init_dense_layer(r, cfg, dtype))(
+            jax.random.split(k[0], cfg.encoder.num_layers)
+        )
+        dec_layers = jax.vmap(lambda r: _init_cross_layer(r, cfg, dtype))(
+            jax.random.split(k[1], cfg.num_layers)
+        )
+        return {
+            "embed": (jax.random.normal(k[2], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+            "enc_layers": enc_layers,
+            "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+            "dec_layers": dec_layers,
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "unembed": (jax.random.normal(k[3], (cfg.d_model, cfg.vocab_size)) * 0.02).astype(dtype),
+        }
+
+    def _enc_ctx(self, src_len: int, bsz: int) -> B.Ctx:
+        pos = jnp.broadcast_to(jnp.arange(src_len)[None], (bsz, src_len))
+        cos, sin = L.rope_cos_sin(pos, self.cfg.head_dim, self.cfg.rope_theta)
+        return B.Ctx(cfg=self.cfg, mesh=self.mesh, cos_local=cos, sin_local=sin,
+                     causal=False, remat=self.remat)
+
+    def _dec_ctx(self, positions, lengths=None, max_cache_len: int = 0) -> B.Ctx:
+        cos, sin = L.rope_cos_sin(positions, self.cfg.head_dim, self.cfg.rope_theta)
+        return B.Ctx(cfg=self.cfg, mesh=self.mesh, cos_local=cos, sin_local=sin,
+                     lengths=lengths, max_cache_len=max_cache_len, remat=self.remat)
+
+    # ------------------------------------------------------------------ encoder
+    def encode(self, params, frame_embeds) -> jax.Array:
+        cfg = self.cfg
+        x = frame_embeds.astype(self.dtype)
+        x = ann(x, "batch", None, "embed")
+        ctx = self._enc_ctx(x.shape[1], x.shape[0])
+
+        def body(xx, p_l):
+            xx, _, _ = B.apply_dense(xx, p_l, ctx, "global", "train", None)
+            return xx, None
+
+        fn = jax.checkpoint(body) if self.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------ decoder stack
+    def _dec_stack(self, params, x, enc_out, ctx: B.Ctx, mode: str, cache=None):
+        cfg = self.cfg
+
+        if mode == "train":
+
+            def body(carry, p_l):
+                xx = carry
+                h, _ = B.attn_sub(L.rms_norm(xx, p_l["ln1"], cfg.norm_eps), p_l["attn"], ctx, "global", "train", None)
+                xx = xx + h
+                ck, cv = _cross_kv(enc_out, p_l["xattn"], cfg)
+                xx = xx + _cross_attend(L.rms_norm(xx, p_l["lnx"], cfg.norm_eps), p_l["xattn"], cfg, ck, cv)
+                xx = xx + L.gated_mlp(L.rms_norm(xx, p_l["ln2"], cfg.norm_eps), p_l["mlp"], cfg.act)
+                return ann(xx, "batch", None, "embed"), None
+
+            fn = jax.checkpoint(body) if ctx.remat else body
+            x, _ = jax.lax.scan(fn, x, params["dec_layers"])
+            return x, None
+
+        if mode == "prefill":
+
+            def body(xx, p_l):
+                h, nc_self = B.attn_sub(L.rms_norm(xx, p_l["ln1"], cfg.norm_eps), p_l["attn"], ctx, "global", "prefill", None)
+                xx = xx + h
+                ck, cv = _cross_kv(enc_out, p_l["xattn"], cfg)
+                xx = xx + _cross_attend(L.rms_norm(xx, p_l["lnx"], cfg.norm_eps), p_l["xattn"], cfg, ck, cv)
+                xx = xx + L.gated_mlp(L.rms_norm(xx, p_l["ln2"], cfg.norm_eps), p_l["mlp"], cfg.act)
+                return ann(xx, "batch", None, "embed"), {"self": nc_self, "cross_k": ck, "cross_v": cv}
+
+            x, nc = jax.lax.scan(body, x, params["dec_layers"])
+            return x, nc
+
+        # decode
+        def body(xx, pc):
+            p_l, c_l = pc
+            h, nc_self = B.attn_sub(L.rms_norm(xx, p_l["ln1"], cfg.norm_eps), p_l["attn"], ctx, "global", "decode", c_l["self"])
+            xx = xx + h
+            xq = L.rms_norm(xx, p_l["lnx"], cfg.norm_eps)
+            bsz = xq.shape[0]
+            H, hd = cfg.num_heads, cfg.head_dim
+            q = (xq @ p_l["xattn"]["wq"]).reshape(bsz, H, hd)
+            valid = jnp.ones(c_l["cross_k"].shape[:2], bool)
+            o = L.decode_attention(q, c_l["cross_k"], c_l["cross_v"], valid)
+            xx = xx + (o.reshape(bsz, 1, H * hd) @ p_l["xattn"]["wo"])
+            xx = xx + L.gated_mlp(L.rms_norm(xx, p_l["ln2"], cfg.norm_eps), p_l["mlp"], cfg.act)
+            nc = {"self": nc_self, "cross_k": c_l["cross_k"], "cross_v": c_l["cross_v"]}
+            return ann(xx, "batch", None, "embed"), nc
+
+        x, nc = jax.lax.scan(body, x, (params["dec_layers"], cache))
+        return x, nc
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, S = tokens.shape
+        enc_out = self.encode(params, batch["frame_embeds"])
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (bsz, S))
+        ctx = self._dec_ctx(positions)
+        x = params["embed"][tokens].astype(self.dtype)
+        x = ann(x, "batch", None, "embed")
+        x, _ = self._dec_stack(params, x, enc_out, ctx, "train")
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(tokens, jnp.float32) if mask is None else mask.astype(jnp.float32)
+        mask = mask.at[:, -1].set(0.0)
+        from repro.models.decoder import _chunked_ce
+
+        ce = _chunked_ce(x, params["unembed"], False, labels, mask)
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    # ------------------------------------------------------------------ prefill / decode
+    def prefill(self, params, batch, max_cache_len: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, S = tokens.shape
+        enc_out = self.encode(params, batch["frame_embeds"])
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (bsz, S))
+        ctx = self._dec_ctx(positions, max_cache_len=max_cache_len)
+        x = params["embed"][tokens].astype(self.dtype)
+        x = ann(x, "batch", None, "embed")
+        x, nc = self._dec_stack(params, x, enc_out, ctx, "prefill")
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x[:, -1], params["unembed"], False)
+        lengths = jnp.full((bsz,), S, jnp.int32)
+        return {"layers": nc, "lengths": lengths}, logits, lengths
+
+    def init_cache(self, bsz: int, max_cache_len: int) -> dict:
+        cfg = self.cfg
+        ctx = B.Ctx(cfg=cfg, max_cache_len=max_cache_len)
+        per_layer = {
+            "self": B.init_block_cache(cfg, bsz, "global", ctx, self.dtype),
+            "cross_k": jnp.zeros((bsz, cfg.encoder.source_len, cfg.num_kv_heads, cfg.head_dim), self.dtype),
+            "cross_v": jnp.zeros((bsz, cfg.encoder.source_len, cfg.num_kv_heads, cfg.head_dim), self.dtype),
+        }
+        stacked = jax.tree.map(lambda a: jnp.stack([a] * cfg.num_layers), per_layer)
+        return {"layers": stacked, "lengths": jnp.zeros((bsz,), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens, batch=None):
+        cfg = self.cfg
+        bsz = tokens.shape[0]
+        lengths = cache["lengths"]
+        ctx = self._dec_ctx(lengths[:, None], lengths=lengths)
+        x = params["embed"][tokens].astype(self.dtype)
+        x = ann(x, "batch", None, "embed")
+        x, nc = self._dec_stack(params, x, None, ctx, "decode", cache["layers"])
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x[:, 0], params["unembed"], False)
+        return logits, {"layers": nc, "lengths": lengths + 1}

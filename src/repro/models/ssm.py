@@ -1,0 +1,202 @@
+"""Mamba-2 / SSD (state-space duality) mixer — chunked training form and the
+O(1)-state decode recurrence.  Follows the minimal SSD reference from
+arXiv:2405.21060, adapted to chunk-parallel JAX (matmul-heavy intra-chunk
+"attention" form on the MXU + lax.scan inter-chunk recurrence).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.distributed.annotate import ann
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """x [..., T] -> [..., T, T]; out[i,j] = sum_{k=j+1..i} x[k] (i>=j) else -inf."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P] (already multiplied by dt)
+    a_bar: jax.Array,  # [B, S, H]  (A * dt, negative)
+    b: jax.Array,  # [B, S, G, N]
+    c: jax.Array,  # [B, S, G, N]
+    chunk: int,
+    initial_state=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    hpg = H // G  # heads per group
+
+    xc = x.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    ac = a_bar.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2).astype(jnp.float32)  # [B,H,nc,c]
+    bc = b.reshape(B, nc, chunk, G, N).astype(jnp.float32)
+    cc = c.reshape(B, nc, chunk, G, N).astype(jnp.float32)
+    # expand groups to heads
+    bh = jnp.repeat(bc, hpg, axis=3)  # [B,nc,c,H,N]
+    ch = jnp.repeat(cc, hpg, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # [B,H,nc,c]
+    L = jnp.exp(segsum(ac))  # [B,H,nc,c,c]
+
+    # intra-chunk (the "attention-like" quadratic-in-chunk term)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", ch, bh, L, xc)
+
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # [B,H,nc,c]
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bh, decay_states, xc)  # [B,nc,H,P,N]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])  # [B,H,nc]
+    s0 = (
+        jnp.zeros((B, H, P, N), dtype=jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        st_c, dec_c = inp  # [B,H,P,N], [B,H]
+        prev = state
+        state = state * dec_c[..., None, None] + st_c
+        return state, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    state_decay_out = jnp.exp(a_cum)  # [B,H,nc,c]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", ch, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final_state
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """x [B, S, C]; w [K, C]; causal depthwise conv along S."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1], :].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba2_mixer(
+    x: jax.Array, p: dict, cfg: SSMConfig, d_model: int
+) -> jax.Array:
+    """Full Mamba-2 block mixer (training / prefill, no cache)."""
+    y, _, _ = mamba2_mixer_with_state(x, p, cfg, d_model)
+    return y
+
+
+def mamba2_mixer_with_state(x: jax.Array, p: dict, cfg: SSMConfig, d_model: int):
+    """Returns (y, final_ssm_state, final_conv_state)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = x @ p["in_proj"]  # [B,S, 2*di + 2*G*N + H]
+    z, xs, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)  # [B,S, di + 2GN]
+    conv_out = jax.nn.silu(_causal_depthwise_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, b, c = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    xs = ann(xs, "batch", None, "dinner")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+    xh = xs.reshape(B, S, H, P)
+    bg = b.reshape(B, S, G, N)
+    cg = c.reshape(B, S, G, N)
+
+    chunk = min(cfg.chunk_size, S)
+    while S % chunk != 0:
+        chunk //= 2
+    y, final_state = ssd_chunked(xh.astype(jnp.float32) * dt[..., None], A[None, None, :] * dt, bg, cg, chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y, p["out_norm"], 1e-6)
+    conv_state = conv_in[:, -(cfg.d_conv - 1) :, :] if S >= cfg.d_conv - 1 else jnp.pad(
+        conv_in, ((0, 0), (cfg.d_conv - 1 - S, 0), (0, 0))
+    )
+    return y @ p["out_proj"], final_state, conv_state
+
+
+def mamba2_decode_step(
+    x: jax.Array,  # [B, D]
+    state: jax.Array,  # [B, H, P, N]
+    conv_state: jax.Array,  # [B, d_conv-1, di+2GN]
+    p: dict,
+    cfg: SSMConfig,
+    d_model: int,
+):
+    """Single-token recurrent update.  Returns (y [B,D], state, conv_state)."""
+    B, _ = x.shape
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xs, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * G * N], axis=-1)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)  # [B, di+2GN]
+    # causal conv over (conv_state ++ conv_in)
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # [B, K, C]
+    w = p["conv_w"].astype(jnp.float32)  # [K, C]
+    conv_out = jax.nn.silu(
+        (window.astype(jnp.float32) * w[None]).sum(axis=1) + p["conv_b"].astype(jnp.float32)
+    ).astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    bg = jnp.repeat(b.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)  # [B,H,N]
+    cg = jnp.repeat(c.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(A[None] * dt)  # [B,H]
+    state = state.astype(jnp.float32) * decay[..., None, None] + (
+        (dt[..., None] * xh)[..., None] * bg[:, :, None, :]
+    )
+    y = (state * cg[:, :, None, :]).sum(-1) + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y, p["out_norm"], 1e-6)
+    new_conv_state = window[:, 1:, :]
+    return y @ p["out_proj"], state, new_conv_state
+
+
+def init_mamba2_params(rng, cfg: SSMConfig, d_model: int, dtype) -> dict:
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    G, N = cfg.n_groups, cfg.d_state
+    k = jax.random.split(rng, 4)
+    proj_out = 2 * di + 2 * G * N + H
+    scale = d_model ** -0.5
+    return {
+        "in_proj": (jax.random.normal(k[0], (d_model, proj_out)) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(k[1], (cfg.d_conv, di + 2 * G * N)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * G * N,), dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype=dtype),
+        "out_proj": (jax.random.normal(k[2], (di, d_model)) * di ** -0.5).astype(dtype),
+    }

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.optim.gradients import clip_by_global_norm, GradAccumulator
+
+__all__ = ["AdamW", "cosine_schedule", "clip_by_global_norm", "GradAccumulator"]

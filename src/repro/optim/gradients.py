@@ -1,0 +1,71 @@
+"""Gradient utilities: global-norm clipping, microbatch accumulation, and
+int8 error-feedback compression (distributed-optimization trick; flagged)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+class GradAccumulator:
+    """Microbatch gradient accumulation via lax.scan.
+
+    ``accumulate(loss_fn, params, batch, n)`` splits the leading batch dim of
+    every leaf into ``n`` microbatches and averages grads in fp32.  Buffer
+    zeroing between macro-steps is the engine's Memory Fill op in the real
+    pipeline (see repro.core.api.fill_like).
+    """
+
+    @staticmethod
+    def accumulate(loss_fn, params, batch, n: int):
+        if n <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            bsz = x.shape[0] if x.ndim else 1
+            # positions_thw has batch at axis 1
+            return x.reshape((n, bsz // n) + x.shape[1:])
+
+        def split_leaf(path, x):
+            name = str(path[-1].key) if path else ""
+            if name == "positions_thw":
+                return x.reshape((x.shape[0], n, x.shape[1] // n) + x.shape[2:]).swapaxes(0, 1)
+            return split(x)
+
+        micro = jax.tree_util.tree_map_with_path(split_leaf, batch)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_sum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda a: (a / n), acc)
+        loss = loss_sum / n
+        return loss, {"ce": loss, "aux": jnp.zeros(())}, grads
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization (for gradient all-reduce)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,142 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Terms per (arch x shape x mesh), all in seconds-per-step on the target
+TPU v5e constants:
+
+  compute    = HLO_FLOPs_per_device / peak_flops
+  memory     = HLO_bytes_per_device / hbm_bw
+  collective = ring-model collective bytes per device / ici_bw
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+figures (verified empirically by roofline/calibrate.py: a 4-way-sharded
+matmul reports 1/4 of the total FLOPs).  Collective bytes are parsed from
+the compiled HLO: per op we apply standard ring-algorithm byte counts using
+the op's replica-group size g:
+
+  all-gather          (g-1)/g * result_bytes
+  all-reduce          2 * (g-1)/g * result_bytes
+  reduce-scatter      (g-1)   * result_bytes       (input = g * result)
+  all-to-all          (g-1)/g * result_bytes
+  collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e (assignment constants)."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link
+    hbm_bytes: float = 16e9  # HBM capacity per chip
+    vmem_bytes: float = 128 * 2 ** 20
+    # kernel-launch + dispatch overhead for one pallas_call (used by the
+    # DSA-adapted offload-crossover model, core/perfmodel.py)
+    launch_overhead_s: float = 4e-6
+
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\(?[^)=]*?\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [n_groups, group_size]<=[total]
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+def collective_bytes_from_hlo(hlo: str) -> Tuple[float, Dict[str, Dict[str, float]]]:
+    """Returns (total per-device collective bytes, per-op breakdown)."""
+    per_op: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    total = 0.0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            moved = rb * (g - 1) / g
+        elif op == "all-reduce":
+            moved = 2.0 * rb * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = rb * (g - 1)
+        elif op == "all-to-all":
+            moved = rb * (g - 1) / g
+        else:  # collective-permute
+            moved = float(rb)
+        per_op[op]["count"] += 1
+        per_op[op]["bytes"] += moved
+        total += moved
+    return total, dict(per_op)
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+    hw: HW = V5E,
+) -> Dict[str, float]:
+    compute = flops_per_dev / hw.peak_flops
+    memory = bytes_per_dev / hw.hbm_bw
+    collective = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    bound = max(compute, memory, collective)
+    terms["roofline_fraction_compute"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops_for_cell(cfg, shape, mode: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode counts one
+    token per sequence, prefill/train count every token."""
+    n = cfg.active_params()
+    if mode == "decode":
+        tokens = shape.global_batch
+        return 2.0 * n * tokens  # forward only
+    tokens = shape.global_batch * shape.seq_len
+    if mode == "prefill":
+        return 2.0 * n * tokens
+    return 6.0 * n * tokens  # fwd + bwd

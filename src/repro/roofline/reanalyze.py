@@ -1,0 +1,56 @@
+"""Recompute roofline terms from saved HLO dumps without recompiling.
+
+    PYTHONPATH=src python -m repro.roofline.reanalyze \
+        --hlo results/hlo --dryrun results/dryrun
+
+Updates the per-cell JSONs in place with the current hlo_cost model; used
+when the cost model improves after an expensive sweep, and by the perf loop
+to diff before/after HLO.
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+from pathlib import Path
+
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def reanalyze(hlo_dir: Path, dryrun_dir: Path) -> int:
+    n = 0
+    for gz in sorted(hlo_dir.glob("*.hlo.gz")):
+        cell = gz.name.replace(".hlo.gz", "")
+        jpath = dryrun_dir / f"{cell}.json"
+        if not jpath.exists():
+            print(f"[skip] no json for {cell}")
+            continue
+        rec = json.loads(jpath.read_text())
+        with gzip.open(gz, "rt") as f:
+            hlo = f.read()
+        cost = analyze_hlo(hlo)
+        rec["flops_per_dev"] = float(cost.flops)
+        rec["bytes_per_dev"] = float(cost.bytes)
+        rec["collective_bytes_per_dev"] = float(cost.coll_bytes)
+        rec["collective_ops"] = {k: dict(v) for k, v in cost.coll_ops.items()}
+        rec.update(roofline_terms(cost.flops, cost.bytes, cost.coll_bytes))
+        mf = rec.get("model_flops_total", 0.0)
+        n_chips = rec.get("n_chips", 1)
+        rec["useful_flops_ratio"] = round(mf / (cost.flops * n_chips), 4) if cost.flops else 0.0
+        jpath.write_text(json.dumps(rec, indent=1, default=str))
+        n += 1
+    return n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="results/hlo")
+    ap.add_argument("--dryrun", default="results/dryrun")
+    args = ap.parse_args()
+    n = reanalyze(Path(args.hlo), Path(args.dryrun))
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

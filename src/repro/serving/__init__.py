@@ -1,0 +1,4 @@
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.pipeline import Request, VhostStyleServer
+
+__all__ = ["PagedKVPool", "Request", "VhostStyleServer"]

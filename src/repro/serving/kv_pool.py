@@ -1,0 +1,129 @@
+"""Paged KV storage with a two-tier (device HBM / host DRAM) page pool.
+
+The DSA mapping (DESIGN.md §2): pages are the transfer granule; swapping a
+sequence's pages between tiers is a BATCH DESCRIPTOR of page copies executed
+as one ``batch_copy`` kernel launch (paper F2), and tier choice follows G4
+(the faster-write tier holds the hot working set).
+
+Pages are [page_tokens, kv_dim] slabs; a sequence owns an ordered page list
+in the page table.  This is the functional state layer under the
+Vhost-style serving pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class PoolStats:
+    device_pages_used: int = 0
+    host_pages_used: int = 0
+    swaps_in: int = 0
+    swaps_out: int = 0
+    batch_copies: int = 0
+    pages_moved: int = 0
+
+
+class PagedKVPool:
+    """Two-tier page pool.  The 'device' and 'host' pools are both jax arrays
+    here (CPU backend); on TPU the host pool lives in pinned host memory and
+    batch_copy rides the DMA engine."""
+
+    def __init__(self, n_device_pages: int, n_host_pages: int, page_tokens: int,
+                 kv_dim: int, dtype=jnp.bfloat16, stream=None):
+        self.page_tokens = page_tokens
+        self.kv_dim = kv_dim
+        self.device_pool = jnp.zeros((n_device_pages, page_tokens, kv_dim), dtype)
+        self.host_pool = jnp.zeros((n_host_pages, page_tokens, kv_dim), dtype)
+        self._free_device = list(range(n_device_pages))[::-1]
+        self._free_host = list(range(n_host_pages))[::-1]
+        # seq_id -> list of (tier, page_idx) in order
+        self.page_table: Dict[int, List[Tuple[str, int]]] = {}
+        self.stream = stream
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------ alloc
+    def alloc(self, seq_id: int, n_pages: int, tier: str = "device") -> bool:
+        free = self._free_device if tier == "device" else self._free_host
+        if len(free) < n_pages:
+            return False
+        pages = [free.pop() for _ in range(n_pages)]
+        self.page_table.setdefault(seq_id, []).extend((tier, p) for p in pages)
+        self._count()
+        return True
+
+    def free(self, seq_id: int):
+        for tier, p in self.page_table.pop(seq_id, []):
+            (self._free_device if tier == "device" else self._free_host).append(p)
+        self._count()
+
+    def _count(self):
+        self.stats.device_pages_used = self.device_pool.shape[0] - len(self._free_device)
+        self.stats.host_pages_used = self.host_pool.shape[0] - len(self._free_host)
+
+    # ------------------------------------------------------------------ page IO
+    def write_page(self, seq_id: int, page_no: int, data: jax.Array):
+        tier, idx = self.page_table[seq_id][page_no]
+        pool = self.device_pool if tier == "device" else self.host_pool
+        pool = pool.at[idx].set(data.astype(pool.dtype))
+        if tier == "device":
+            self.device_pool = pool
+        else:
+            self.host_pool = pool
+
+    def read_pages(self, seq_id: int) -> jax.Array:
+        out = []
+        for tier, idx in self.page_table[seq_id]:
+            pool = self.device_pool if tier == "device" else self.host_pool
+            out.append(pool[idx])
+        return jnp.concatenate(out, axis=0)
+
+    # ------------------------------------------------------------------ tier moves (batch descriptors)
+    def swap_out(self, seq_id: int) -> bool:
+        """Device -> host, all pages of a sequence in ONE batch descriptor."""
+        entries = self.page_table.get(seq_id, [])
+        dev = [(i, p) for i, (t, p) in enumerate(entries) if t == "device"]
+        if not dev:
+            return True
+        if len(self._free_host) < len(dev):
+            return False
+        host_pages = [self._free_host.pop() for _ in dev]
+        src_idx = jnp.asarray([p for _, p in dev], jnp.int32)
+        dst_idx = jnp.asarray(host_pages, jnp.int32)
+        self.host_pool = kops.batch_copy(self.device_pool, self.host_pool, src_idx, dst_idx)
+        for (slot, p), hp in zip(dev, host_pages):
+            entries[slot] = ("host", hp)
+            self._free_device.append(p)
+        self.stats.swaps_out += 1
+        self.stats.batch_copies += 1
+        self.stats.pages_moved += len(dev)
+        self._count()
+        return True
+
+    def swap_in(self, seq_id: int) -> bool:
+        """Host -> device (one batch descriptor), for scheduling a sequence."""
+        entries = self.page_table.get(seq_id, [])
+        host = [(i, p) for i, (t, p) in enumerate(entries) if t == "host"]
+        if not host:
+            return True
+        if len(self._free_device) < len(host):
+            return False
+        dev_pages = [self._free_device.pop() for _ in host]
+        src_idx = jnp.asarray([p for _, p in host], jnp.int32)
+        dst_idx = jnp.asarray(dev_pages, jnp.int32)
+        self.device_pool = kops.batch_copy(self.host_pool, self.device_pool, src_idx, dst_idx)
+        for (slot, p), dp in zip(host, dev_pages):
+            entries[slot] = ("device", dp)
+            self._free_host.append(p)
+        self.stats.swaps_in += 1
+        self.stats.batch_copies += 1
+        self.stats.pages_moved += len(host)
+        self._count()
+        return True

@@ -1,0 +1,16 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see the single real device (dry-run sets its
+# own flag as its first import action).
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,207 @@
+"""Sharding rules, fault tolerance, collectives, and the HLO cost model."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (
+    Heartbeat,
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerDetector,
+    run_with_restarts,
+)
+from repro.distributed.sharding import ShardingRules
+from jax.sharding import PartitionSpec as P
+
+
+def _rules(model=16, data=16, pod=None):
+    axes = {"data": data, "model": model}
+    if pod:
+        axes["pod"] = pod
+    table = {
+        "batch": tuple(a for a in ("pod", "data") if a in axes),
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "seq": None,
+    }
+    return ShardingRules(mesh_axes=axes, table=table)
+
+
+def test_divisibility_fallback():
+    r = _rules()
+    # 25 heads % 16 != 0 -> replicated (batch 32 IS divisible by data=16)
+    assert r.spec((32, 128, 25, 64), ("batch", None, "heads", None)) == P("data", None, None, None)
+    # 64 heads -> sharded
+    assert r.spec((32, 128, 64, 64), ("batch", None, "heads", None)) == P("data", None, "model", None)
+    # odd vocab replicates
+    assert r.spec((50280, 1024), ("vocab", None)) == P(None, None)
+    assert r.spec((262144, 1024), ("vocab", None)) == P("model", None)
+
+
+def test_no_duplicate_mesh_axes():
+    r = _rules()
+    # both dims want "model": second falls back
+    spec = r.spec((64, 22016), ("heads", "mlp"))
+    assert spec == P("model", None)
+
+
+def test_multi_axis_batch():
+    r = _rules(pod=2)
+    spec = r.spec((256, 4096), ("batch", None))
+    assert spec == P(("pod", "data"), None)
+    # batch=2 not divisible by 2*16 -> replicate
+    assert r.spec((2, 16), ("batch", None)) == P(None, None)
+
+
+def test_zero1_pspec():
+    from repro.distributed.params import zero1_pspec
+
+    r = _rules()
+    # param replicated on dim0 (4096 % 16 == 0) -> moments shard over data
+    s = zero1_pspec(P(None, "model"), (4096, 22016), r)
+    assert s == P("data", "model")
+    # nothing divisible -> unchanged
+    s = zero1_pspec(P(None,), (17,), r)
+    assert s == P(None)
+
+
+# --------------------------------------------------------------------------- fault tolerance
+def test_heartbeat_monitor(tmp_path):
+    hb = Heartbeat(str(tmp_path), rank=0)
+    hb.beat(5)
+    mon = HeartbeatMonitor(str(tmp_path), world_size=2, timeout_s=60)
+    dead = mon.dead_ranks()
+    assert dead == [1]  # rank 1 never beat
+
+
+def test_straggler_detector():
+    det = StragglerDetector(min_samples=4, z_threshold=2.0)
+    for step in range(10):
+        for r in range(7):
+            det.record(r, 0.1)
+        det.record(7, 0.5)  # rank 7 is slow
+    assert det.stragglers() == [7]
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0}
+    saved = {"step": 0}
+
+    def train_fn(start):
+        calls["n"] += 1
+        for i in range(start, 10):
+            saved["step"] = i
+            if calls["n"] == 1 and i == 4:
+                raise RuntimeError("simulated node failure")
+        return 10
+
+    final = run_with_restarts(
+        train_fn, lambda: saved["step"], RestartPolicy(backoff_base_s=0.0), sleep=lambda s: None
+    )
+    assert final == 10 and calls["n"] == 2
+
+
+def test_restart_policy_bounds():
+    p = RestartPolicy(max_restarts=2, backoff_base_s=0.0)
+    assert p.should_restart()
+    p.backoff()
+    p.backoff()
+    assert not p.should_restart()
+
+
+# --------------------------------------------------------------------------- collectives
+def test_compressed_psum_single_device():
+    from repro.distributed.collectives import compressed_psum_tree
+
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)}
+    red, fb = compressed_psum_tree(g, mesh, "data")
+    # n=1: reduction is identity up to int8 quantization error
+    err = np.abs(np.asarray(red["w"]) - np.asarray(g["w"])).max()
+    scale = np.abs(np.asarray(g["w"])).max() / 127
+    assert err <= scale * 1.01
+    # error feedback carries the quantization residual
+    assert np.abs(np.asarray(fb["w"])).max() <= scale * 1.01
+
+
+def test_ring_all_reduce_single_device():
+    from repro.distributed.collectives import ring_all_reduce
+
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.arange(12.0).reshape(3, 4)
+    y = ring_all_reduce(x, mesh, "data")
+    assert np.allclose(np.asarray(y), np.asarray(x))
+
+
+# --------------------------------------------------------------------------- hlo cost model
+def test_hlo_cost_counts_loop_trips():
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    L, B, D = 7, 32, 64
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    ws = jnp.zeros((L, D, D), jnp.float32)
+    x = jnp.zeros((B, D), jnp.float32)
+    comp = jax.jit(f).lower(ws, x).compile()
+    cost = analyze_hlo(comp.as_text())
+    assert cost.flops == pytest.approx(L * 2 * B * D * D, rel=0.01)
+    g = jax.jit(jax.grad(f)).lower(ws, x).compile()
+    cost_g = analyze_hlo(g.as_text())
+    assert cost_g.flops == pytest.approx(3 * L * 2 * B * D * D, rel=0.05)
+
+
+_COLL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline.hlo_cost import analyze_hlo
+
+mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+w = jax.ShapeDtypeStruct((256, 512), jnp.float32, sharding=NamedSharding(mesh, P(None, "model")))
+x = jax.ShapeDtypeStruct((64, 256), jnp.float32, sharding=NamedSharding(mesh, P()))
+
+
+def f(x, w):
+    h = x @ w  # column-parallel
+    return (h @ w.T).sum()  # row-parallel -> psum
+
+
+with mesh:
+    comp = jax.jit(f).lower(x, w).compile()
+cost = analyze_hlo(comp.as_text())
+assert cost.coll_bytes > 0, "expected collectives"
+assert "all-reduce" in cost.coll_ops or "reduce-scatter" in cost.coll_ops, cost.coll_ops
+# ring model: AR of [64,256] f32 over 4 devices = 2*(3/4)*64*256*4 bytes,
+# possibly on a scalar instead if XLA reduces post-sum; just bound it
+assert cost.coll_bytes < 1e8
+print("COLL OK", cost.coll_bytes)
+"""
+
+
+def test_hlo_cost_collectives_counted(tmp_path):
+    """Collective byte accounting on a real sharded module (subprocess: the
+    main pytest process is pinned to 1 device)."""
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    res = subprocess.run(
+        [sys.executable, "-c", _COLL_SCRIPT],
+        env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "COLL OK" in res.stdout

@@ -1,0 +1,146 @@
+"""Per-kernel correctness: shape/dtype sweeps asserting bit-exact agreement
+with the pure-jnp/zlib oracles in repro.kernels.ref."""
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dif, ops, ref
+
+SHAPES = [(128,), (8, 128), (1000,), (64, 130), (3, 5, 7, 4)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32, jnp.uint8]
+
+
+def _rand(rng, shape, dtype):
+    if dtype in (jnp.float32, jnp.bfloat16):
+        return jnp.asarray(rng.normal(size=shape) * 3, dtype)
+    if dtype == jnp.int32:
+        return jnp.asarray(rng.integers(-(2**30), 2**30, shape), jnp.int32)
+    return jnp.asarray(rng.integers(0, 255, shape), jnp.uint8)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_memcpy_matches_identity(rng, shape, dtype):
+    nbytes = int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+    if nbytes % 4:
+        pytest.skip("non-word-multiple buffer")
+    x = _rand(rng, shape, dtype)
+    for n_pe in (1, 2, 4):
+        y = ops.memcpy(x, n_pe=n_pe)
+        assert y.shape == x.shape and y.dtype == x.dtype
+        assert (np.asarray(y) == np.asarray(x)).all()
+
+
+@pytest.mark.parametrize("n_words", [7, 128, 1000, 8192])
+@pytest.mark.parametrize("plen", [1, 2, 4])
+def test_fill_matches_ref(n_words, plen):
+    pat = jnp.asarray(np.arange(1, plen + 1) * 0x01010101, jnp.uint32)
+    out = ops.fill(pat, n_words)
+    want = ref.fill_ref((n_words,), pat)
+    assert (np.asarray(out) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("n", [256, 1000, 4096])
+def test_compare_finds_first_diff(rng, n):
+    a = jnp.asarray(rng.integers(0, 2**31, n), jnp.uint32)
+    eq, idx = ops.compare(a, a)
+    assert bool(eq) and int(idx) == -1
+    for pos in [0, n // 2, n - 1]:
+        b = a.at[pos].add(1)
+        eq, idx = ops.compare(a, b)
+        weq, widx = ref.compare_ref(a, b)
+        assert bool(eq) == bool(weq) and int(idx) == int(widx) == pos
+
+
+def test_compare_pattern(rng):
+    pat = jnp.asarray([0xAA55AA55, 0x12345678], jnp.uint32)
+    buf = ref.fill_ref((2048,), pat)
+    eq, idx = ops.compare_pattern(buf, pat)
+    assert bool(eq)
+    eq, idx = ops.compare_pattern(buf.at[99].add(1), pat)
+    assert not bool(eq) and int(idx) == 99
+
+
+@pytest.mark.parametrize("shape,dtype", [((512,), jnp.float32), ((33, 128), jnp.bfloat16)])
+def test_dualcast(rng, shape, dtype):
+    x = _rand(rng, shape, dtype)
+    d1, d2 = ops.dualcast(x)
+    assert (np.asarray(d1) == np.asarray(x)).all()
+    assert (np.asarray(d2) == np.asarray(x)).all()
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 64, 256, 1000, 4096, 65536])
+def test_crc32_matches_zlib(rng, n):
+    x = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    got = int(ops.crc32(x))
+    want = zlib.crc32(np.asarray(x, dtype="<u4").tobytes()) & 0xFFFFFFFF
+    assert got == want
+
+
+def test_crc32_over_dtypes(rng):
+    x = jnp.asarray(rng.normal(size=(123, 4)), jnp.float32)
+    got = int(ops.crc32(x))
+    want = zlib.crc32(np.asarray(x, dtype="<f4").tobytes()) & 0xFFFFFFFF
+    assert got == want
+
+
+@pytest.mark.parametrize("n,k", [(512, 10), (4096, 100), (1024, 0)])
+def test_delta_roundtrip(rng, n, k):
+    base = jnp.asarray(rng.integers(0, 2**31, n), jnp.uint32)
+    src = jnp.array(base)
+    if k:
+        pos = rng.choice(n, k, replace=False)
+        src = src.at[pos].add(7)
+    off, data, count, ovf = ops.delta_create(src, base, cap=max(k, 16))
+    woff, wdata, wcount, wovf = ref.delta_create_ref(src, base, cap=max(k, 16))
+    assert int(count) == int(wcount) == k and bool(ovf) == bool(wovf) is False
+    out = ops.delta_apply(base, off, data)
+    assert (np.asarray(out) == np.asarray(src)).all()
+    out_jnp = ops.delta_apply(base, off, data, use_kernel=False)
+    assert (np.asarray(out_jnp) == np.asarray(src)).all()
+
+
+def test_delta_overflow_flag(rng):
+    base = jnp.zeros(256, jnp.uint32)
+    src = base + 1  # every word differs
+    off, data, count, ovf = ops.delta_create(src, base, cap=16)
+    assert bool(ovf) and int(count) == 256
+
+
+def test_batch_copy_matches_ref(rng):
+    P, page = 12, (8, 128)
+    src_pool = jnp.asarray(rng.normal(size=(P,) + page), jnp.float32)
+    dst_pool = jnp.asarray(rng.normal(size=(P,) + page), jnp.float32)
+    src_idx = jnp.asarray([0, 3, 3, 11], jnp.int32)
+    dst_idx = jnp.asarray([5, 2, 7, 0], jnp.int32)
+    want = ref.batch_copy_ref(src_pool, dst_pool, src_idx, dst_idx)
+    got = ops.batch_copy(src_pool, jnp.array(dst_pool), src_idx, dst_idx)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # untouched pages preserved
+    untouched = sorted(set(range(P)) - set(np.asarray(dst_idx)))
+    assert (np.asarray(got)[untouched] == np.asarray(dst_pool)[untouched]).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_batch_copy_dtypes(rng, dtype):
+    pool = jnp.asarray(rng.normal(size=(4, 16, 64)), dtype)
+    out = ops.batch_copy(pool, jnp.zeros_like(pool), jnp.asarray([1], jnp.int32),
+                         jnp.asarray([2], jnp.int32))
+    assert (np.asarray(out[2]) == np.asarray(pool[1])).all()
+
+
+def test_dif_roundtrip_and_detection(rng):
+    w = jnp.asarray(rng.integers(0, 2**32, 128 * 6, dtype=np.uint32))
+    framed = dif.dif_insert(w)
+    assert (np.asarray(framed) == np.asarray(ref.dif_insert_ref(w))).all()
+    assert bool(np.asarray(dif.dif_check(framed)).all())
+    corrupted = framed.at[2, 64].add(1)
+    okm = np.asarray(dif.dif_check(corrupted))
+    assert not okm[2] and okm.sum() == 5
+    assert (np.asarray(dif.dif_strip(framed)) == np.asarray(w)).all()
+    # update recomputes a valid frame after mutation
+    fixed = dif.dif_update(corrupted)
+    assert bool(np.asarray(dif.dif_check(fixed)).all())

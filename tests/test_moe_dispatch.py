@@ -1,0 +1,46 @@
+"""EP (shard_map) dispatch must be numerically equivalent to the dense
+GSPMD dispatch in the no-drop regime — run in a subprocess with 8 virtual
+devices (device count is fixed at first jax init, so it cannot be set
+inside the main pytest process)."""
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import MoEConfig
+from repro.models import moe as M
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = MoEConfig(num_experts=8, top_k=2, d_ff_expert=32, num_shared_experts=1,
+                capacity_factor=8.0)
+D = 16
+rng = np.random.default_rng(0)
+p = M.init_moe_params(jax.random.key(0), cfg, D, jnp.float32)
+x = jnp.asarray(rng.normal(size=(2, 16, D)), jnp.float32)
+with mesh:
+    y_dense, aux_d = jax.jit(lambda x: M.moe_block(x, p, cfg, "silu", dispatch="dense"))(x)
+    y_ep, aux_e = jax.jit(
+        lambda x: M.moe_block(x, p, cfg, "silu", dispatch="a2a", mesh=mesh)
+    )(x)
+err = float(np.abs(np.asarray(y_dense) - np.asarray(y_ep)).max())
+assert err < 1e-4, err
+assert abs(float(aux_d) - float(aux_e)) < 1e-6
+print("OK", err)
+"""
+
+
+def test_ep_dispatch_matches_dense():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on the system's invariants."""
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import DEFAULT_MODEL
+from repro.kernels import ops, ref
+
+_words = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_words, min_size=1, max_size=600))
+def test_crc32_matches_zlib_property(ws):
+    x = jnp.asarray(np.asarray(ws, np.uint32))
+    assert int(ops.crc32(x)) == zlib.crc32(np.asarray(ws, "<u4").tobytes()) & 0xFFFFFFFF
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_words, min_size=2, max_size=400), st.data())
+def test_crc_detects_any_single_word_corruption(ws, data):
+    """CRC32 detects every single-word error (Hamming distance >= 1)."""
+    x = np.asarray(ws, np.uint32)
+    i = data.draw(st.integers(0, len(ws) - 1))
+    delta = data.draw(st.integers(1, 2**32 - 1))
+    y = x.copy()
+    y[i] = np.uint32((int(y[i]) + delta) % 2**32)
+    if (y == x).all():
+        return
+    assert int(ops.crc32(jnp.asarray(x))) != int(ops.crc32(jnp.asarray(y)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(_words, min_size=8, max_size=300),
+    st.sets(st.integers(0, 299), min_size=0, max_size=40),
+)
+def test_delta_roundtrip_property(base_words, flip):
+    base = np.asarray(base_words, np.uint32)
+    flip = sorted(i for i in flip if i < len(base))
+    src = base.copy()
+    for i in flip:
+        src[i] ^= 0xFFFFFFFF
+    changed = int((src != base).sum())
+    off, data, count, ovf = ops.delta_create(
+        jnp.asarray(src), jnp.asarray(base), cap=max(changed, 8)
+    )
+    assert int(count) == changed and not bool(ovf)
+    out = ops.delta_apply(jnp.asarray(base), off, data)
+    assert (np.asarray(out) == src).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.data())
+def test_batch_copy_equals_sequential(n_desc, data):
+    """One batch descriptor == the same descriptors submitted one-by-one
+    (paper F2: batching changes cost, not semantics)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    P = 8
+    src_pool = jnp.asarray(rng.normal(size=(P, 8, 128)), jnp.float32)
+    dst0 = jnp.asarray(rng.normal(size=(P, 8, 128)), jnp.float32)
+    src_idx = jnp.asarray(rng.integers(0, P, n_desc), jnp.int32)
+    dst_idx = jnp.asarray(rng.integers(0, P, n_desc), jnp.int32)
+    batched = ops.batch_copy(src_pool, jnp.array(dst0), src_idx, dst_idx)
+    seq = jnp.array(dst0)
+    for i in range(n_desc):
+        seq = ops.batch_copy(src_pool, seq, src_idx[i : i + 1], dst_idx[i : i + 1])
+    assert (np.asarray(batched) == np.asarray(seq)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(6, 28), st.integers(1, 64), st.integers(1, 4), st.integers(1, 32))
+def test_perfmodel_monotonicity(log2_bytes, batch, n_pe, depth):
+    """Model invariants from the paper's figures: batching, PEs, and async
+    depth never DECREASE throughput; throughput never exceeds the HBM copy
+    roofline."""
+    m = DEFAULT_MODEL
+    nbytes = float(2 ** log2_bytes)
+    t = m.throughput(nbytes, batch_size=batch, n_pe=n_pe, async_depth=depth)
+    assert t <= m.pe_peak_bw + 1e-6
+    assert m.throughput(nbytes, batch_size=batch + 1, n_pe=n_pe, async_depth=depth) >= t * 0.5
+    assert m.throughput(nbytes, batch_size=batch, n_pe=n_pe, async_depth=depth + 1) >= t - 1e-9
+    assert m.throughput(nbytes, batch_size=batch, n_pe=min(n_pe + 1, 4), async_depth=depth) >= t - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(_words, min_size=1, max_size=256))
+def test_fill_then_compare_pattern_is_equal(ws):
+    pat = jnp.asarray(np.asarray(ws[:2] or [0], np.uint32))
+    n = 4 * len(ws) + 3
+    buf = ops.fill(pat, n)
+    eq, idx = ops.compare_pattern(buf, pat)
+    assert bool(eq), (idx, n)

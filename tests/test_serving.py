@@ -1,0 +1,107 @@
+"""Serving: paged KV pool tier moves, reorder-array in-order commit, and the
+end-to-end Vhost-style continuous batching loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_stream
+from repro.models.api import build_model
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.pipeline import ReorderArray, Request, VhostStyleServer
+
+
+def test_paged_pool_swap_roundtrip(rng):
+    pool = PagedKVPool(n_device_pages=8, n_host_pages=8, page_tokens=16, kv_dim=64)
+    assert pool.alloc(seq_id=1, n_pages=3)
+    data = [jnp.asarray(rng.normal(size=(16, 64)), jnp.bfloat16) for _ in range(3)]
+    for i, d in enumerate(data):
+        pool.write_page(1, i, d)
+    before = np.asarray(pool.read_pages(1))
+    assert pool.swap_out(1)
+    assert pool.stats.device_pages_used == 0
+    assert pool.swap_in(1)
+    after = np.asarray(pool.read_pages(1))
+    assert (before == after).all()
+    assert pool.stats.batch_copies == 2 and pool.stats.pages_moved == 6
+    pool.free(1)
+    assert pool.stats.device_pages_used == 0 and pool.stats.host_pages_used == 0
+
+
+def test_pool_capacity_limits():
+    pool = PagedKVPool(n_device_pages=2, n_host_pages=1, page_tokens=8, kv_dim=32)
+    assert pool.alloc(1, 2)
+    assert not pool.alloc(2, 1)  # device full
+    assert not pool.swap_out(1)  # host too small for 2 pages
+    pool.free(1)
+    assert pool.alloc(2, 1)
+
+
+class _FakeRecord:
+    def __init__(self):
+        self.done = False
+
+    def is_done(self):
+        return self.done
+
+
+def test_reorder_array_commits_in_order():
+    ra = ReorderArray()
+    recs = [_FakeRecord() for _ in range(4)]
+    for i, r in enumerate(recs):
+        ra.push(i, r, payload=i)
+    recs[1].done = True
+    recs[3].done = True
+    assert ra.pop_completed() == []  # head incomplete -> nothing commits
+    recs[0].done = True
+    out = ra.pop_completed()
+    assert [t for t, _ in out] == [0, 1]  # stops at 2
+    recs[2].done = True
+    out = ra.pop_completed()
+    assert [t for t, _ in out] == [2, 3]
+    assert len(ra) == 0
+
+
+@pytest.mark.slow
+def test_vhost_server_end_to_end(rng):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    server = VhostStyleServer(model, params, slots=3, max_cache_len=64,
+                              stream=make_stream(n_instances=2))
+    n_req = 7
+    for i in range(n_req):
+        server.enqueue(Request(req_id=i,
+                               prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                               max_new_tokens=4))
+    steps = server.run_until_drained(max_steps=500)
+    assert server.metrics["completed"] == n_req
+    assert steps < 500
+    assert server.metrics["decoded_tokens"] >= n_req * 3
+    # in-order admission: all copy bursts went through the reorder array
+    assert server.metrics["copy_bursts"] == n_req
+
+
+def test_vhost_decode_consistency(rng):
+    """A sequence decoded through the server matches direct greedy decode."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+
+    # direct greedy
+    cache, logits, _ = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                                     max_cache_len=64)
+    toks = [int(jnp.argmax(logits[0]))]
+    cur = jnp.asarray([[toks[-1]]], jnp.int32)
+    for _ in range(3):
+        lg, cache = model.decode_step(params, cache, cur)
+        toks.append(int(jnp.argmax(lg[0])))
+        cur = jnp.asarray([[toks[-1]]], jnp.int32)
+
+    server = VhostStyleServer(model, params, slots=1, max_cache_len=64)
+    req = Request(req_id=0, prompt=prompt, max_new_tokens=4)
+    server.enqueue(req)
+    server.run_until_drained(max_steps=100)
+    assert req.output == toks

@@ -1,0 +1,75 @@
+"""Sliding-window ring-cache correctness: decoding PAST the window boundary
+must match teacher forcing (entries wrap and expire in the ring), including
+hymba's always-attendable meta tokens."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+
+
+def _greedy_rollout(model, params, prompt, n_steps, max_cache):
+    cache, logits, _ = model.prefill(params, {"tokens": prompt}, max_cache_len=max_cache)
+    toks = [int(jnp.argmax(logits[0]))]
+    cur = jnp.asarray([[toks[-1]]], jnp.int32)
+    outs = [logits]
+    for _ in range(n_steps - 1):
+        logits, cache = model.decode_step(params, cache, cur)
+        toks.append(int(jnp.argmax(logits[0])))
+        outs.append(logits)
+        cur = jnp.asarray([[toks[-1]]], jnp.int32)
+    return toks, outs
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "hymba-1.5b"])
+def test_decode_past_window_matches_teacher_forcing(arch):
+    """Window W=16 (reduced); prefill 12 tokens then decode 12 more — the
+    ring wraps around W during the rollout.  每 decode step's logits must
+    match a fresh full prefill of the same prefix."""
+    cfg = get_config(arch).reduced()  # window 16
+    assert cfg.window_size == 16
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+
+    n_extra = 12
+    toks, step_logits = _greedy_rollout(model, params, prompt, n_extra + 1, max_cache=64)
+
+    # teacher forcing: for a few checkpoints past the boundary, prefill the
+    # full prefix and compare the final-position logits
+    seq = list(np.asarray(prompt[0]))
+    for i, t in enumerate(toks[:-1]):
+        seq.append(t)
+        if i in (5, 8, n_extra - 1):  # positions 17, 20, 23 — beyond W=16
+            full = jnp.asarray([seq], jnp.int32)
+            _, logits_tf, _ = model.prefill(params, {"tokens": full}, max_cache_len=64)
+            np.testing.assert_allclose(
+                np.asarray(step_logits[i + 1], np.float32),
+                np.asarray(logits_tf, np.float32),
+                rtol=0.1, atol=0.1,
+            )
+
+
+def test_ring_slots_wrap_and_expire():
+    """Direct cache inspection: after decoding past W, ring positions hold
+    the LAST W absolute positions only."""
+    cfg = get_config("gemma3-1b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(1))
+    prompt = jnp.zeros((1, 8), jnp.int32)
+    cache, _, _ = model.prefill(params, {"tokens": prompt}, max_cache_len=64)
+    cur = jnp.zeros((1, 1), jnp.int32)
+    for _ in range(20):
+        _, cache = model.decode_step(params, cache, cur)
+    # find a local-layer ring cache and check its positions
+    seg = cache["segments"][-1]  # trailing unrolled locals for gemma3 reduced
+    ring = seg[0] if isinstance(seg, list) else seg
+    pos = np.asarray(jax.tree.leaves({"pos": ring["pos"]})[0])[0]
+    live = sorted(p for p in pos.tolist() if p >= 0)
+    total = 8 + 20
+    assert live == list(range(total - cfg.window_size, total))
