@@ -13,7 +13,7 @@ from typing import List
 import jax.numpy as jnp
 
 from benchmarks.common import MODEL, Row, gbps
-from repro.core import make_stream
+from repro.core import make_device
 
 HBM_BW = 819e9
 SIZES = [65536, 1 << 20]
@@ -33,13 +33,13 @@ def rows() -> List[Row]:
     # measured: engine fan-out really goes to distinct instances
     src = jnp.zeros((256, 128), jnp.float32)
     for n in INSTANCES:
-        s = make_stream(n_instances=n)
+        d = make_device(n_instances=n)
         t0 = time.perf_counter()
-        hs = [s.memcpy_async(src) for _ in range(8)]
-        for h in hs:
-            s.wait(h)
+        futs = [d.memcpy_async(src) for _ in range(8)]
+        for f in futs:
+            f.wait()
         used = sum(
-            1 for e in s.engines
+            1 for e in d.engines
             if any(w.stats["submitted"] for g in e.config.groups for w in g.wqs)
         )
         out.append((f"fig10/measured/x{n}", (time.perf_counter() - t0) * 1e6,

@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.configs import get_config
-from repro.core import make_stream
+from repro.core import make_device
 from repro.serving.pipeline import Request, VhostStyleServer
 
 
@@ -27,7 +27,7 @@ def _run(async_pipeline: bool, n_req: int = 6) -> dict:
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(0))
     server = VhostStyleServer(model, params, slots=3, max_cache_len=64,
-                              stream=make_stream(n_instances=2))
+                              device=make_device(n_instances=2))
     rng = np.random.default_rng(0)
     for i in range(n_req):
         server.enqueue(Request(req_id=i,
@@ -41,7 +41,7 @@ def _run(async_pipeline: bool, n_req: int = 6) -> dict:
         steps = 0
         while server.queue or server.active or len(server.reorder):
             server._stage_submit_copies()
-            server.stream.drain()
+            server.device.drain()
             server._stage_poll_commit()
             server._stage_decode()
             steps += 1

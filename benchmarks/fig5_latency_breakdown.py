@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row
-from repro.core import OpType, Stream, WorkDescriptor
+from repro.core import Device, OpType, WorkDescriptor
 from repro.core.descriptor import BatchDescriptor
 
 BATCHES = [1, 4, 16, 64]
@@ -24,7 +24,7 @@ BATCHES = [1, 4, 16, 64]
 
 def rows() -> List[Row]:
     out: List[Row] = []
-    s = Stream()
+    s = Device()
     src = jnp.zeros((8, 128), jnp.float32)  # 4KB
     for bs in BATCHES:
         t0 = time.perf_counter()
@@ -38,11 +38,11 @@ def rows() -> List[Row]:
         t_prep = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        h = s.submit(batch)
+        fut = s.submit(batch)
         t_submit = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        s.wait(h)
+        fut.wait()
         t_wait = time.perf_counter() - t0
 
         total = t_alloc + t_prep + t_submit + t_wait

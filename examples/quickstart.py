@@ -1,45 +1,60 @@
 """Quickstart: the DSA-style streaming engine in 60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The entry point is a ``Device``: N engine instances (paper Fig. 10) behind
+a submit policy.  Every submission returns a ``Future`` — wait on it, poll
+it, chain host work with ``.then``, or pass it as ``after=`` to fence a
+later descriptor on it (DSA batch-fence semantics across submissions).
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import OpType, WorkDescriptor, make_stream
+from repro.core import OpType, WorkDescriptor, make_device
 
-# A stream over 2 engine instances (paper Fig. 10), each with the default
-# SPR-like shape: groups of WQs + 4 PEs.
-stream = make_stream(n_instances=2)
+# A device over 2 engine instances, placing each submission on the least
+# loaded instance (paper Fig. 10: multi-instance load balancing).
+device = make_device(n_instances=2, policy="least_loaded")
 
-# --- async memcpy (G2: async always) ---------------------------------------
+# --- async memcpy (G2: async always) ----------------------------------------
 x = jnp.asarray(np.random.default_rng(0).normal(size=(1024, 128)), jnp.float32)
-handle = stream.memcpy_async(x)
+fut = device.memcpy_async(x)
 # ... host does other work here while the engine streams ...
-y = stream.wait(handle)
-_, record = handle
-print(f"memcpy: {record.bytes_processed} bytes, "
-      f"modeled TPU time {record.modeled_time_us:.1f}us, status={record.status.name}")
+y = fut.result()
+print(f"memcpy: {fut.record.bytes_processed} bytes, "
+      f"modeled TPU time {fut.record.modeled_time_us:.1f}us, status={fut.status.name}")
 
-# --- batch descriptor (F2: one submission, many copies) ---------------------
-descs = [WorkDescriptor(op=OpType.MEMCPY, src=jnp.full((8, 128), i, jnp.float32))
-         for i in range(8)]
-outs = stream.wait(stream.batch_async(descs))
-print(f"batch: {len(outs)} copies fused into one kernel launch")
-
-# --- CRC32 (zlib-compatible, chunk-parallel on TPU) --------------------------
-crc = stream.crc32(x)
+# --- chaining: host continuation fires when the copy retires -----------------
+crc_hex = device.crc32_async(x).then(lambda c: f"0x{int(c):08x}")
 import zlib
-assert crc == zlib.crc32(np.asarray(x, '<f4').tobytes()) & 0xFFFFFFFF
-print(f"crc32: 0x{crc:08x} (matches zlib)")
+assert crc_hex.result() == f"0x{zlib.crc32(np.asarray(x, '<f4').tobytes()) & 0xFFFFFFFF:08x}"
+print(f"crc32: {crc_hex.result()} (matches zlib, via .then)")
+
+# --- dependency fences: `after=` defers launch until parents retire ----------
+gate = device.promise()  # a host-event fence
+fenced = device.memcpy_async(x, after=[gate])
+device.kick()
+assert not fenced.done()  # parked in the engine's fence list, not launched
+gate.set_result(None)     # host event fires -> the engine releases the copy
+assert np.allclose(np.asarray(fenced.result()), np.asarray(x))
+print("fence: copy deferred until the promise retired, then launched")
 
 # --- delta records (incremental state) ---------------------------------------
 base = jnp.asarray(np.random.default_rng(1).integers(0, 2**31, 4096), jnp.uint32)
 changed = base.at[jnp.asarray([7, 99, 2048])].add(1)
-offsets, data, count, overflow = stream.delta_create(changed, base, cap=64)
-print(f"delta: {int(count)} changed words, overflow={bool(overflow)}")
-restored = stream.delta_apply(base, offsets, data)
+offsets, data, count, overflow = device.delta_create_async(changed, base, cap=64).result()
+restored = device.delta_apply(base, offsets, data)
 assert (np.asarray(restored) == np.asarray(changed)).all()
-print("delta apply: roundtrip exact")
+print(f"delta: {int(count)} changed words, overflow={bool(overflow)}; roundtrip exact")
 
-stream.drain()
+# --- batch descriptor (F2: one submission, many copies) ----------------------
+descs = [WorkDescriptor(op=OpType.MEMCPY, src=jnp.full((8, 128), i, jnp.float32))
+         for i in range(8)]
+outs = device.batch_async(descs).result()
+print(f"batch: {len(outs)} copies fused into one kernel launch")
+
+# --- where did the policy place everything? ----------------------------------
+device.drain()
+placed = dict(device.policy_stats["decisions"])
+print(f"policy={device.policy_stats['policy']} placements={placed}")
 print("done.")

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import make_stream
+from repro.core import make_device
 from repro.models.api import build_model
 from repro.serving.kv_pool import PagedKVPool
 from repro.serving.pipeline import Request, VhostStyleServer
@@ -20,7 +20,7 @@ model = build_model(cfg, remat=False)
 params = model.init(jax.random.key(0))
 
 server = VhostStyleServer(model, params, slots=4, max_cache_len=96,
-                          stream=make_stream(n_instances=2))
+                          device=make_device(n_instances=2, policy="least_loaded"))
 rng = np.random.default_rng(0)
 for i in range(10):
     server.enqueue(Request(req_id=i,

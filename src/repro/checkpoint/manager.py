@@ -79,14 +79,20 @@ class CheckpointConfig:
 
 
 class CheckpointManager:
-    def __init__(self, config: CheckpointConfig, stream=None):
+    def __init__(self, config: CheckpointConfig, device=None, *, stream=None):
         self.cfg = config
         self.dir = Path(config.directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.replica_dir = Path(str(self.dir) + "-replica") if config.replicas > 1 else None
         if self.replica_dir:
             self.replica_dir.mkdir(parents=True, exist_ok=True)
-        self.stream = stream
+        if device is None and stream is not None:  # deprecated alias
+            import warnings
+
+            warnings.warn("CheckpointManager(stream=...) is deprecated; pass device=",
+                          DeprecationWarning, stacklevel=2)
+            device = stream
+        self.device = device
         self._thread: Optional[threading.Thread] = None
         self._save_count = 0
         self._base: Optional[Dict[str, np.ndarray]] = None  # last full snapshot (u32 views)
@@ -97,13 +103,15 @@ class CheckpointManager:
     # ------------------------------------------------------------------ crc
     def _crc(self, data: bytes) -> int:
         if self.cfg.crc_impl == "kernel":
-            import jax.numpy as jnp
-
+            pad = (-len(data)) % 4
+            words = jax.numpy.asarray(np.frombuffer(data + b"\0" * pad, dtype="<u4"))
+            if self.device is not None:
+                # CRC as an engine descriptor: shows up in telemetry and
+                # shares the instance pool with other checkpoint traffic
+                return self.device.crc32(words)
             from repro.kernels import ops as kops
 
-            pad = (-len(data)) % 4
-            words = np.frombuffer(data + b"\0" * pad, dtype="<u4")
-            return int(kops.crc32(jax.numpy.asarray(words)))
+            return int(kops.crc32(words))
         return zlib.crc32(data) & 0xFFFFFFFF
 
     # ------------------------------------------------------------------ save

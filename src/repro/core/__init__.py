@@ -1,5 +1,9 @@
 """The paper's primary contribution as a composable JAX module: a DSA-style
-descriptor-programmed streaming engine (see DESIGN.md §2-3)."""
+descriptor-programmed streaming engine (see DESIGN.md §2-3).
+
+Entry point: ``Device`` / ``make_device`` — policy-driven multi-instance
+submission returning ``Future`` objects.  ``Stream`` / ``make_stream`` are
+deprecated one-release shims over Device."""
 from repro.core.api import Stream, dto, dto_enabled, make_stream
 from repro.core.descriptor import (
     BatchDescriptor,
@@ -9,6 +13,18 @@ from repro.core.descriptor import (
     Status,
     WorkDescriptor,
 )
+from repro.core.device import (
+    Device,
+    Future,
+    LeastLoadedPolicy,
+    Promise,
+    QueueFull,
+    RoundRobinPolicy,
+    StickyPolicy,
+    SubmitPolicy,
+    get_policy,
+    make_device,
+)
 from repro.core.engine import DeviceConfig, GroupConfig, StreamEngine
 from repro.core.perfmodel import DEFAULT_MODEL, EngineModel, TIERS
 from repro.core.queues import WorkQueue
@@ -17,18 +33,28 @@ __all__ = [
     "BatchDescriptor",
     "CacheHint",
     "CompletionRecord",
+    "Device",
     "DeviceConfig",
     "DEFAULT_MODEL",
     "EngineModel",
+    "Future",
     "GroupConfig",
+    "LeastLoadedPolicy",
     "OpType",
+    "Promise",
+    "QueueFull",
+    "RoundRobinPolicy",
     "Status",
+    "StickyPolicy",
     "Stream",
     "StreamEngine",
+    "SubmitPolicy",
     "TIERS",
     "WorkDescriptor",
     "WorkQueue",
     "dto",
     "dto_enabled",
+    "get_policy",
+    "make_device",
     "make_stream",
 ]

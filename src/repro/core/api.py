@@ -4,123 +4,71 @@ The paper ships two software layers above raw descriptors:
   * DML — explicit C/C++ API with async offload and load balancing;
   * DTO — LD_PRELOAD interception of memcpy/memset/memcmp.
 
-Here ``Stream`` is the DML-style facade (explicit submit/wait over a
-StreamEngine, multi-instance round-robin load balancing), and ``dto`` is the
-drop-in layer: jnp-compatible copy/fill/compare functions that route
-through the engine when one is active, else fall back to plain jnp.
+The DML-style facade now lives in core/device.py: ``Device`` owns N engine
+instances behind a pluggable SubmitPolicy and returns ``Future`` objects
+from every submit.  This module keeps:
+
+  * ``Stream`` / ``make_stream`` — DEPRECATED one-release shims over Device
+    that preserve the old (engine, record) tuple handles; new code should
+    use ``Device`` / ``make_device`` and Futures.
+  * ``dto`` — the drop-in layer: jnp-compatible copy/fill/compare functions
+    that route through the active Device when one is installed, else fall
+    back to plain jnp.
 """
 from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.descriptor import (
-    BatchDescriptor,
-    CacheHint,
-    CompletionRecord,
-    OpType,
-    Status,
-    WorkDescriptor,
-)
+from repro.core.descriptor import CompletionRecord
+from repro.core.device import Device, Future, QueueFull, make_device
 from repro.core.engine import DeviceConfig, StreamEngine
 
 
-class Stream:
-    """Explicit async API over one or more engine instances (paper Fig. 10:
-    multi-instance scaling via round-robin load balancing)."""
+class Stream(Device):
+    """DEPRECATED: use Device.  Thin compatibility shim preserving the old
+    raw-tuple handle API: ``submit`` (and the ``*_async`` helpers, which
+    route through it) return ``(engine, record)`` instead of a Future, and
+    ``wait``/``poll`` accept those tuples.  Removed after one release."""
 
     def __init__(self, engines: Optional[Sequence[StreamEngine]] = None):
-        self.engines = list(engines) if engines else [StreamEngine()]
-        self._next = 0
-        self._lock = threading.Lock()
-
-    def _pick(self) -> StreamEngine:
-        with self._lock:
-            e = self.engines[self._next % len(self.engines)]
-            self._next += 1
-            return e
-
-    # ------------------------------------------------------------------ async API
-    def submit(self, desc, group: int = 0, wq: int = 0) -> Tuple[StreamEngine, CompletionRecord]:
-        eng = self._pick()
-        status, rec = eng.submit(desc, group=group, wq=wq)
-        if status == Status.RETRY:
-            # ENQCMD retry loop (paper §3.3)
-            while status == Status.RETRY:
-                eng.kick()
-                status, rec = eng.submit(desc, group=group, wq=wq)
-        return eng, rec
-
-    def memcpy_async(self, src: jax.Array, **kw):
-        return self.submit(WorkDescriptor(op=OpType.MEMCPY, src=src, **kw))
-
-    def dualcast_async(self, src: jax.Array, **kw):
-        return self.submit(WorkDescriptor(op=OpType.DUALCAST, src=src, **kw))
-
-    def fill_async(self, pattern, n_words: int, **kw):
-        return self.submit(WorkDescriptor(op=OpType.FILL, pattern=pattern, n_words=n_words, **kw))
-
-    def compare_async(self, a, b, **kw):
-        return self.submit(WorkDescriptor(op=OpType.COMPARE, src=a, src2=b, **kw))
-
-    def crc32_async(self, buf, **kw):
-        return self.submit(WorkDescriptor(op=OpType.CRC32, src=buf, **kw))
-
-    def delta_create_async(self, src, ref, cap: int = 1024, **kw):
-        return self.submit(WorkDescriptor(op=OpType.DELTA_CREATE, src=src, src2=ref, cap=cap, **kw))
-
-    def delta_apply_async(self, ref, offsets, data, **kw):
-        return self.submit(
-            WorkDescriptor(op=OpType.DELTA_APPLY, src=ref, src_idx=offsets, src2=data, **kw)
+        warnings.warn(
+            "Stream is deprecated; use repro.core.Device (make_device) — "
+            "submissions now return Future objects",
+            DeprecationWarning, stacklevel=2,
         )
+        super().__init__(engines if engines else None, policy="round_robin")
 
-    def batch_copy_async(self, src_pool, dst_pool, src_idx, dst_idx, **kw):
-        return self.submit(
-            WorkDescriptor(
-                op=OpType.BATCH_COPY, src=src_pool, dst_pool=dst_pool,
-                src_idx=src_idx, dst_idx=dst_idx, **kw,
-            )
-        )
-
-    def batch_async(self, descriptors: Sequence[WorkDescriptor], **kw):
-        return self.submit(BatchDescriptor(descriptors=list(descriptors), **kw))
-
-    # ------------------------------------------------------------------ sync sugar
-    def wait(self, handle) -> Any:
-        eng, rec = handle
-        return eng.wait(rec)
-
-    def poll(self, handle) -> bool:
-        eng, rec = handle
-        return eng.poll(rec)
-
-    def memcpy(self, src):
-        return self.wait(self.memcpy_async(src))
-
-    def crc32(self, buf) -> int:
-        return int(self.wait(self.crc32_async(buf)))
-
-    def compare(self, a, b):
-        return self.wait(self.compare_async(a, b))
-
-    def delta_create(self, src, ref, cap: int = 1024):
-        return self.wait(self.delta_create_async(src, ref, cap=cap))
-
-    def delta_apply(self, ref, offsets, data):
-        return self.wait(self.delta_apply_async(ref, offsets, data))
-
-    def drain(self):
-        for e in self.engines:
-            e.drain()
+    def submit(self, desc, group: int = 0, wq: int = 0,
+               **kw) -> Tuple[StreamEngine, CompletionRecord]:
+        # legacy ENQCMD semantics: the old Stream spun on RETRY until the
+        # submission landed and never failed, so the shim must not let
+        # Device's bounded backoff surface QueueFull to old callers
+        while True:
+            try:
+                fut = super().submit(desc, group=group, wq=wq, **kw)
+            except QueueFull:
+                continue
+            return fut.engine, fut.record
 
 
 def make_stream(n_instances: int = 1, **cfg_kw) -> Stream:
-    return Stream([StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
-                   for i in range(n_instances)])
+    """DEPRECATED: use make_device."""
+    warnings.warn(
+        "make_stream is deprecated; use repro.core.make_device",
+        DeprecationWarning, stacklevel=2,
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return Stream(
+            [StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
+             for i in range(n_instances)]
+        )
 
 
 # --------------------------------------------------------------------------- DTO
@@ -128,12 +76,12 @@ _active: threading.local = threading.local()
 
 
 @contextlib.contextmanager
-def dto_enabled(stream: Optional[Stream] = None, min_bytes: int = 8192):
+def dto_enabled(device: Optional[Device] = None, min_bytes: int = 8192):
     """Transparent offload: inside this context, dto.memcpy/memset/memcmp
     route through the engine for transfers >= min_bytes (the paper's
     CacheLib study offloads >= 8KB — 4.8% of calls, 96.4% of bytes)."""
     prev = getattr(_active, "ctx", None)
-    _active.ctx = (stream or make_stream(), min_bytes)
+    _active.ctx = (device or make_device(), min_bytes)
     try:
         yield _active.ctx[0]
     finally:
@@ -156,8 +104,8 @@ class dto:
         nbytes = x.size * x.dtype.itemsize
         if ctx and nbytes >= ctx[1]:
             word = int.from_bytes(bytes([byte]) * 4, "little")
-            s = ctx[0]
-            out = s.wait(s.fill_async(jnp.asarray([word], jnp.uint32), nbytes // 4))
+            d = ctx[0]
+            out = d.wait(d.fill_async(jnp.asarray([word], jnp.uint32), nbytes // 4))
             from repro.kernels.ops import from_words
 
             return from_words(out.reshape(-1), nbytes // 4, x.shape, x.dtype)

@@ -99,6 +99,7 @@ class BatchDescriptor:
 class CompletionRecord:
     desc_id: int
     status: Status = Status.PENDING
+    op: Optional[str] = None  # op name ("memcpy", "batch", ...) for telemetry
     result: Any = None  # op-specific payload (arrays / scalars)
     bytes_processed: int = 0
     modeled_time_us: float = 0.0  # perfmodel estimate on the target TPU
@@ -107,3 +108,12 @@ class CompletionRecord:
 
     def is_done(self) -> bool:
         return self.status in (Status.SUCCESS, Status.ERROR, Status.OVERFLOW)
+
+
+def op_name(desc) -> str:
+    """Telemetry label for a submittable: the op type, or "batch" for a
+    multi-descriptor submission."""
+    op = getattr(desc, "op", None)
+    if op is not None:
+        return op.value if isinstance(op, OpType) else str(op)
+    return "batch"

@@ -1,0 +1,506 @@
+"""First-class submission futures and the policy-driven Device facade.
+
+The paper's software lesson (§3.3, §5) is that DSA pays off only when
+offload is *asynchronous* and completion handling is cheap: ENQCMD retry
+must be bounded, descriptors inside a batch can be ordered with fences, and
+throughput scales by balancing submissions across instances (Fig. 10).
+This module makes each of those a first-class API object:
+
+  Future        one submitted descriptor: owns its engine + completion
+                record, supports wait()/poll()/result()/then()/callbacks,
+                and can be passed as ``after=`` to any submit to express a
+                dependency fence (the engine defers launch until every
+                parent retires).
+  Promise       an externally-completed Future (``device.promise()``) —
+                a software fence for gating submissions on host events.
+  SubmitPolicy  pluggable instance selection: round_robin, least_loaded
+                (by WQ occupancy), sticky (per-producer affinity).
+  Device        the top-level entry point replacing ``Stream``: owns N
+                StreamEngine instances, applies the policy per submission,
+                and converts ENQCMD RETRY into bounded exponential backoff
+                ending in ``QueueFull`` instead of an unbounded spin.
+
+``Stream`` (core/api.py) remains as a thin deprecated shim over Device for
+one release.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from collections import Counter
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import jax
+
+from repro.core.descriptor import (
+    BatchDescriptor,
+    CompletionRecord,
+    OpType,
+    Status,
+    WorkDescriptor,
+    op_name,
+)
+from repro.core.engine import DeviceConfig, StreamEngine
+from repro.core.queues import Submittable
+
+
+class QueueFull(RuntimeError):
+    """All backoff attempts exhausted: every eligible WQ kept returning
+    RETRY (ENQCMD's carry flag).  Carries the engine and attempt count so
+    callers can rebalance or shed load instead of spinning forever."""
+
+    def __init__(self, engine_name: str, attempts: int):
+        super().__init__(
+            f"work queue full on {engine_name} after {attempts} submission "
+            f"attempts with exponential backoff"
+        )
+        self.engine_name = engine_name
+        self.attempts = attempts
+
+
+# --------------------------------------------------------------------------- futures
+class Future:
+    """Handle for one in-flight descriptor: engine + completion record,
+    completion callbacks, and chaining.  Replaces the raw (engine, record)
+    tuples of the old Stream API."""
+
+    def __init__(self, device: Optional["Device"], engine: Optional[StreamEngine],
+                 record: CompletionRecord):
+        self.device = device
+        self.engine = engine
+        self.record = record
+        self._callbacks: List[Callable[["Future"], None]] = []
+        self._fired = False
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def status(self) -> Status:
+        return self.record.status
+
+    @property
+    def op(self) -> Optional[str]:
+        return self.record.op
+
+    @property
+    def error(self) -> Optional[str]:
+        return self.record.error
+
+    def done(self) -> bool:
+        """Non-kicking completion check."""
+        return self.record.is_done()
+
+    # queues.py / engine fences duck-type on is_done(), so a Future can be a
+    # dependency anywhere a CompletionRecord can
+    def is_done(self) -> bool:
+        return self.done()
+
+    # -- progress ------------------------------------------------------------
+    def _pump(self):
+        if self.device is not None:
+            self.device.kick()
+        elif self.engine is not None:
+            self.engine.kick()
+
+    def poll(self) -> bool:
+        """Kick the engine(s), then report completion; fires callbacks on the
+        transition to done (the UMWAIT-poll analogue)."""
+        self._pump()
+        if self.done():
+            self._fire_callbacks()
+            return True
+        return False
+
+    def wait(self) -> Any:
+        """Block until the record resolves; returns the raw result payload
+        (None when the descriptor errored — use result() to raise instead)."""
+        if self.engine is None:
+            self._pump()
+            if not self.done():
+                raise RuntimeError("unresolved promise: no engine will complete it")
+        else:
+            delay = 50e-6
+            while not self.done():
+                self._pump()
+                if self.record.status == Status.RUNNING:
+                    if self.device is not None:
+                        with self.device._engine_lock:
+                            self.engine.wait(self.record)
+                    else:
+                        self.engine.wait(self.record)
+                elif not self.done():
+                    # deferred on a fence resolved elsewhere (another thread
+                    # or a Promise): back off instead of burning the core
+                    time.sleep(delay)
+                    delay = min(delay * 2, 1e-3)
+        self._fire_callbacks()
+        return self.record.result
+
+    def result(self) -> Any:
+        """wait(), but a failed descriptor raises instead of returning None."""
+        value = self.wait()
+        if self.record.status == Status.ERROR:
+            raise RuntimeError(self.record.error or "descriptor failed")
+        return value
+
+    # -- chaining ------------------------------------------------------------
+    def then(self, fn: Callable[[Any], Any]) -> "ChainedFuture":
+        """Return a Future for ``fn(result)``, applied when this one retires."""
+        return ChainedFuture(self, fn)
+
+    def add_done_callback(self, fn: Callable[["Future"], None]):
+        """Register ``fn(future)`` to run when completion is observed
+        (poll/wait/result).  Callbacks fire once, in registration order; a
+        callback added after completion runs immediately."""
+        if self._fired:
+            fn(self)
+        else:
+            self._callbacks.append(fn)
+
+    # alias matching the issue's spelling
+    done_callback = add_done_callback
+
+    def _fire_callbacks(self):
+        if self._fired or not self.done():
+            return
+        self._fired = True
+        callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+
+class ChainedFuture(Future):
+    """Future for a host-side continuation: resolves to fn(parent result)
+    once the parent retires.  Errors propagate (parent failure or fn raising
+    both mark this record ERROR)."""
+
+    def __init__(self, parent: Future, fn: Callable[[Any], Any]):
+        rec = CompletionRecord(desc_id=-1, status=Status.PENDING,
+                               op=f"then({op_str(parent)})")
+        super().__init__(parent.device, None, rec)
+        self.parent = parent
+        self.fn = fn
+
+    def _resolve(self):
+        if self.record.is_done():
+            return
+        if self.parent.record.status == Status.ERROR:
+            self.record.status = Status.ERROR
+            self.record.error = self.parent.record.error or "parent failed"
+            return
+        try:
+            self.record.result = self.fn(self.parent.record.result)
+            self.record.status = Status.SUCCESS
+        except Exception as e:  # noqa: BLE001
+            self.record.status = Status.ERROR
+            self.record.error = f"{type(e).__name__}: {e}"
+
+    def done(self) -> bool:
+        if not self.record.is_done() and self.parent.done():
+            self._resolve()
+        return self.record.is_done()
+
+    def poll(self) -> bool:
+        if self.parent.poll():
+            self._resolve()
+        if self.done():
+            self._fire_callbacks()
+            return True
+        return False
+
+    def wait(self) -> Any:
+        if not self.record.is_done():
+            self.parent.wait()
+            self._resolve()
+        self._fire_callbacks()
+        return self.record.result
+
+
+class Promise(Future):
+    """A software fence: a Future completed by the host, not an engine.
+    Use as ``after=[p]`` to hold submissions until ``p.set_result(...)``."""
+
+    def __init__(self, device: Optional["Device"] = None):
+        super().__init__(device, None,
+                         CompletionRecord(desc_id=-1, status=Status.PENDING, op="promise"))
+
+    def set_result(self, value: Any = None):
+        self.record.result = value
+        self.record.status = Status.SUCCESS
+        self._fire_callbacks()
+        if self.device is not None:
+            self.device.kick()  # release anything fenced on this promise
+
+    def set_error(self, error: Union[str, BaseException]):
+        self.record.error = str(error)
+        self.record.status = Status.ERROR
+        self._fire_callbacks()
+        if self.device is not None:
+            self.device.kick()
+
+
+def op_str(f: Future) -> str:
+    return f.record.op or "?"
+
+
+# --------------------------------------------------------------------------- policies
+class SubmitPolicy:
+    """Chooses which engine instance receives a submission (paper Fig. 10:
+    multi-instance scaling depends on balanced placement)."""
+
+    name = "base"
+
+    def select(self, engines: Sequence[StreamEngine], desc: Submittable,
+               producer: Optional[str]) -> StreamEngine:
+        raise NotImplementedError
+
+
+class RoundRobinPolicy(SubmitPolicy):
+    """Rotate across instances regardless of load (the paper's baseline)."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+        self._lock = threading.Lock()
+
+    def select(self, engines, desc, producer):
+        with self._lock:
+            e = engines[self._next % len(engines)]
+            self._next += 1
+            return e
+
+
+class LeastLoadedPolicy(SubmitPolicy):
+    """Pick the instance with the lowest aggregate WQ occupancy — the
+    paper's guideline for avoiding a hot instance when transfer sizes are
+    skewed.  Ties break toward the lowest index (stable placement)."""
+
+    name = "least_loaded"
+
+    @staticmethod
+    def occupancy(e: StreamEngine) -> float:
+        qs = [w for g in e.config.groups for w in g.wqs]
+        return sum(len(w) for w in qs) / max(sum(w.size for w in qs), 1)
+
+    def select(self, engines, desc, producer):
+        return min(engines, key=self.occupancy)
+
+
+class StickyPolicy(SubmitPolicy):
+    """Per-producer affinity: one producer always lands on one instance
+    (DWQ-per-core analogue, G6).  Unnamed producers fall back to
+    round-robin so anonymous traffic still spreads."""
+
+    name = "sticky"
+
+    def __init__(self):
+        self._fallback = RoundRobinPolicy()
+
+    def select(self, engines, desc, producer):
+        if producer is None:
+            return self._fallback.select(engines, desc, producer)
+        h = zlib.crc32(producer.encode()) & 0xFFFFFFFF
+        return engines[h % len(engines)]
+
+
+POLICIES: Dict[str, Callable[[], SubmitPolicy]] = {
+    "round_robin": RoundRobinPolicy,
+    "least_loaded": LeastLoadedPolicy,
+    "sticky": StickyPolicy,
+}
+
+
+def get_policy(policy: Union[str, SubmitPolicy, None]) -> SubmitPolicy:
+    if policy is None:
+        return RoundRobinPolicy()
+    if isinstance(policy, SubmitPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown submit policy {policy!r}; "
+                         f"expected one of {sorted(POLICIES)}") from None
+
+
+# --------------------------------------------------------------------------- device
+class Device:
+    """Top-level submission facade over N StreamEngine instances.
+
+    Every submit routes through the SubmitPolicy, returns a Future, and
+    turns WQ RETRY into bounded exponential backoff (max_retries doublings
+    of backoff_base_s) ending in QueueFull — never an unbounded spin.
+    """
+
+    def __init__(self, engines: Optional[Sequence[StreamEngine]] = None, *,
+                 n_instances: int = 1,
+                 policy: Union[str, SubmitPolicy, None] = "round_robin",
+                 config: Optional[DeviceConfig] = None,
+                 max_retries: int = 10, backoff_base_s: float = 20e-6):
+        if engines is not None:
+            self.engines = list(engines)
+        else:
+            self.engines = [
+                StreamEngine(config or DeviceConfig.default(), name=f"dsa{i}")
+                for i in range(n_instances)
+            ]
+        self.policy = get_policy(policy)
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        # per-policy-decision telemetry: which instance each submission
+        # landed on, per op, plus backoff pressure
+        self.policy_stats: Dict[str, Any] = {
+            "policy": self.policy.name,
+            "decisions": Counter(),       # engine name -> submissions routed
+            "decisions_by_op": Counter(),  # (engine, op) -> submissions
+            "backoff_retries": 0,
+            "queue_full": 0,
+        }
+        self._lock = threading.Lock()
+        # serializes engine mutation (records/slots/deferred have no internal
+        # locking) so background submitters — e.g. async checkpoint CRCs —
+        # can share the device with foreground traffic
+        self._engine_lock = threading.RLock()
+
+    # ------------------------------------------------------------------ submit
+    def submit(self, desc: Submittable, *, after: Optional[Sequence[Any]] = None,
+               group: int = 0, wq: int = 0, producer: Optional[str] = None) -> Future:
+        """Submit one descriptor; returns its Future.
+
+        ``after``: Futures / CompletionRecords this descriptor must not
+        launch before (DSA batch-fence semantics across submissions).
+        Raises QueueFull when the target WQ stays full through every
+        backoff attempt."""
+        eng = self.policy.select(self.engines, desc, producer)
+        deps = list(after) if after is not None else None
+        delay = self.backoff_base_s
+        for attempt in range(self.max_retries + 1):
+            with self._engine_lock:
+                status, rec = eng.submit(desc, group=group, wq=wq,
+                                         producer=producer, after=deps)
+            if status != Status.RETRY:
+                with self._lock:
+                    self.policy_stats["decisions"][eng.name] += 1
+                    self.policy_stats["decisions_by_op"][f"{eng.name}/{op_name(desc)}"] += 1
+                    self.policy_stats["backoff_retries"] += attempt
+                return Future(self, eng, rec)
+            self.kick()  # give PEs a chance to retire and free WQ slots
+            time.sleep(delay)
+            delay *= 2
+        with self._lock:
+            self.policy_stats["backoff_retries"] += self.max_retries
+            self.policy_stats["queue_full"] += 1
+        raise QueueFull(eng.name, self.max_retries + 1)
+
+    def promise(self) -> Promise:
+        """A host-completed fence Future (see Promise)."""
+        return Promise(self)
+
+    # ------------------------------------------------------------------ async ops
+    def memcpy_async(self, src: jax.Array, **kw):
+        return self.submit(WorkDescriptor(op=OpType.MEMCPY, src=src), **kw)
+
+    def dualcast_async(self, src: jax.Array, **kw):
+        return self.submit(WorkDescriptor(op=OpType.DUALCAST, src=src), **kw)
+
+    def fill_async(self, pattern, n_words: int, **kw):
+        return self.submit(
+            WorkDescriptor(op=OpType.FILL, pattern=pattern, n_words=n_words), **kw
+        )
+
+    def compare_async(self, a, b, **kw):
+        return self.submit(WorkDescriptor(op=OpType.COMPARE, src=a, src2=b), **kw)
+
+    def crc32_async(self, buf, **kw):
+        return self.submit(WorkDescriptor(op=OpType.CRC32, src=buf), **kw)
+
+    def delta_create_async(self, src, ref, cap: int = 1024, **kw):
+        return self.submit(
+            WorkDescriptor(op=OpType.DELTA_CREATE, src=src, src2=ref, cap=cap), **kw
+        )
+
+    def delta_apply_async(self, ref, offsets, data, **kw):
+        return self.submit(
+            WorkDescriptor(op=OpType.DELTA_APPLY, src=ref, src_idx=offsets, src2=data), **kw
+        )
+
+    def batch_copy_async(self, src_pool, dst_pool, src_idx, dst_idx, **kw):
+        return self.submit(
+            WorkDescriptor(op=OpType.BATCH_COPY, src=src_pool, dst_pool=dst_pool,
+                           src_idx=src_idx, dst_idx=dst_idx), **kw
+        )
+
+    def batch_async(self, descriptors: Sequence[WorkDescriptor], **kw):
+        return self.submit(BatchDescriptor(descriptors=list(descriptors)), **kw)
+
+    # ------------------------------------------------------------------ sync sugar
+    def wait(self, handle) -> Any:
+        if isinstance(handle, Future):
+            return handle.wait()
+        eng, rec = handle  # legacy (engine, record) tuples from the Stream shim
+        return eng.wait(rec)
+
+    def poll(self, handle) -> bool:
+        if isinstance(handle, Future):
+            return handle.poll()
+        eng, rec = handle
+        return eng.poll(rec)
+
+    def memcpy(self, src):
+        return self.wait(self.memcpy_async(src))
+
+    def crc32(self, buf) -> int:
+        return int(self.wait(self.crc32_async(buf)))
+
+    def compare(self, a, b):
+        return self.wait(self.compare_async(a, b))
+
+    def delta_create(self, src, ref, cap: int = 1024):
+        return self.wait(self.delta_create_async(src, ref, cap=cap))
+
+    def delta_apply(self, ref, offsets, data):
+        return self.wait(self.delta_apply_async(ref, offsets, data))
+
+    # ------------------------------------------------------------------ lifecycle
+    def kick(self):
+        """Pump every instance's arbiter + deferred fences once."""
+        with self._engine_lock:
+            for e in self.engines:
+                e.kick()
+
+    def drain(self):
+        """Run all instances dry, including cross-engine fences: a deferred
+        descriptor on engine A whose parent lives on engine B resolves here
+        because every engine is pumped each round."""
+        while True:
+            with self._engine_lock:
+                self.kick()
+                for e in self.engines:
+                    e.drain()
+                pending = any(e._deferred for e in self.engines) or any(
+                    len(w) for e in self.engines for g in e.config.groups for w in g.wqs
+                )
+                if not pending:
+                    break
+                released = False
+                for e in self.engines:
+                    for *_, deps, _rec in e._deferred:
+                        if all(d.is_done() for d in deps):
+                            released = True
+                if not released:
+                    # remaining fences wait on unresolved promises; nothing
+                    # an engine pump can do
+                    break
+
+
+def make_device(n_instances: int = 1, *,
+                policy: Union[str, SubmitPolicy, None] = "round_robin",
+                max_retries: int = 10, backoff_base_s: float = 20e-6,
+                **cfg_kw) -> Device:
+    """Build a Device over n fresh engine instances (Fig. 10 topology).
+    ``cfg_kw`` forwards to DeviceConfig.default (wqs_per_group, wq_size,
+    wq_mode, pes_per_group, n_groups)."""
+    engines = [StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
+               for i in range(n_instances)]
+    return Device(engines, policy=policy, max_retries=max_retries,
+                  backoff_base_s=backoff_base_s)

@@ -31,6 +31,7 @@ from repro.core.descriptor import (
     OpType,
     Status,
     WorkDescriptor,
+    op_name,
 )
 from repro.core.perfmodel import DEFAULT_MODEL, EngineModel
 from repro.core.queues import Submittable, WorkQueue
@@ -117,23 +118,84 @@ class StreamEngine:
         }
         self._rr: Dict[str, int] = {g.name: 0 for g in self.config.groups}
         self.records: Dict[int, CompletionRecord] = {}
+        # deferred submissions waiting on dependency fences:
+        # (desc, group, wq, producer, deps, record)
+        self._deferred: List[Tuple[Submittable, int, int, Optional[str], List[Any], CompletionRecord]] = []
+        # fence capacity: deferred descriptors hold WQ-adjacent state, so the
+        # park list is bounded like a WQ (RETRY past this -> caller backoff)
+        self.max_deferred = 4 * sum(
+            w.size for g in self.config.groups for w in g.wqs
+        )
 
     # ------------------------------------------------------------------ submission
     def wq(self, group: int = 0, wq: int = 0) -> WorkQueue:
         return self.config.groups[group].wqs[wq]
 
     def submit(self, desc: Submittable, group: int = 0, wq: int = 0,
-               producer: Optional[str] = None) -> Tuple[Status, CompletionRecord]:
+               producer: Optional[str] = None,
+               after: Optional[Sequence[Any]] = None) -> Tuple[Status, CompletionRecord]:
+        """Enqueue a descriptor.  ``after`` is a sequence of dependency fences
+        (CompletionRecords or anything with ``is_done()``/``status``): the
+        descriptor is held back — the DSA batch-fence analogue — and only
+        enters its WQ once every dependency has retired."""
+        after = list(after or ())
+        failed = next((d for d in after
+                       if d.is_done() and d.status in (Status.ERROR, Status.OVERFLOW)), None)
+        if failed is not None:
+            rec = CompletionRecord(desc_id=desc.desc_id, status=Status.ERROR,
+                                   op=op_name(desc),
+                                   error=f"dependency failed: {failed.status.name}")
+            self.records[desc.desc_id] = rec
+            return Status.ERROR, rec
+        deps = [d for d in after if not d.is_done()]
+        if deps:
+            if len(self._deferred) >= self.max_deferred:
+                # fence list full: same RETRY contract as a full WQ, so the
+                # Device layer applies bounded backoff / QueueFull here too
+                return Status.RETRY, CompletionRecord(
+                    desc_id=desc.desc_id, status=Status.RETRY, op=op_name(desc)
+                )
+            rec = CompletionRecord(desc_id=desc.desc_id, status=Status.PENDING,
+                                   op=op_name(desc))
+            self.records[desc.desc_id] = rec
+            self._deferred.append((desc, group, wq, producer, deps, rec))
+            self.kick()
+            return Status.PENDING, rec
         status = self.wq(group, wq).submit(desc, producer=producer)
-        rec = CompletionRecord(desc_id=desc.desc_id, status=status)
+        rec = CompletionRecord(desc_id=desc.desc_id, status=status, op=op_name(desc))
         if status != Status.RETRY:
             self.records[desc.desc_id] = rec
         self.kick()
         return status, rec
 
     # ------------------------------------------------------------------ dispatch
+    def _pump_deferred(self):
+        """Release deferred descriptors whose dependency fences have retired.
+        A failed dependency fails the dependent (no silent launch on a torn
+        fence); a full WQ keeps the entry deferred for the next kick."""
+        still: List[Tuple[Submittable, int, int, Optional[str], List[Any], CompletionRecord]] = []
+        for desc, group, wq, producer, deps, rec in self._deferred:
+            done = [d for d in deps if d.is_done()]
+            failed = next((d for d in done
+                           if d.status in (Status.ERROR, Status.OVERFLOW)), None)
+            if failed is not None:
+                rec.status = Status.ERROR
+                rec.error = f"dependency failed: {failed.status.name}"
+                continue
+            remaining = [d for d in deps if not d.is_done()]
+            if remaining:
+                still.append((desc, group, wq, producer, remaining, rec))
+                continue
+            status = self.wq(group, wq).submit(desc, producer=producer)
+            if status == Status.RETRY:
+                still.append((desc, group, wq, producer, [], rec))
+        self._deferred = still
+
     def kick(self):
-        """Group arbiters: move descriptors from WQs to free PE slots."""
+        """Group arbiters: release retired fences, then move descriptors from
+        WQs to free PE slots."""
+        if self._deferred:
+            self._pump_deferred()
         for g in self.config.groups:
             slots = self._slots[g.name]
             for slot in slots:
@@ -162,7 +224,11 @@ class StreamEngine:
     def _launch(self, slot: _PESlot, desc: Submittable):
         # descriptors may be enqueued on a WQ directly (raw portal writes);
         # materialize their completion record lazily
-        rec = self.records.setdefault(desc.desc_id, CompletionRecord(desc_id=desc.desc_id))
+        rec = self.records.setdefault(
+            desc.desc_id, CompletionRecord(desc_id=desc.desc_id, op=op_name(desc))
+        )
+        if rec.op is None:
+            rec.op = op_name(desc)
         rec.status = Status.RUNNING
         slot.record = rec
         slot.t0 = time.perf_counter()
@@ -229,10 +295,16 @@ class StreamEngine:
 
     def _execute_batch(self, b: BatchDescriptor):
         descs = list(b.descriptors)
-        # F2 fusion: homogeneous same-shape copies -> ONE batch_copy launch
+        # F2 fusion: homogeneous same-shape copies -> ONE batch_copy launch.
+        # Fuse only when per-descriptor flags agree: a mixed cache-hint batch
+        # or an explicit destination pool would be silently dropped by the
+        # fused kernel (it writes a fresh zeroed pool), so those fall back to
+        # the unfused per-descriptor path.
         if (
             len(descs) > 1
             and all(d.op == OpType.MEMCPY for d in descs)
+            and all(d.dst_pool is None for d in descs)
+            and len({d.cache_hint for d in descs}) == 1
             and len({(d.src.shape, str(d.src.dtype)) for d in descs}) == 1
         ):
             pool = jnp.stack([d.src for d in descs])
@@ -270,8 +342,13 @@ class StreamEngine:
         return rec.result
 
     def drain(self):
-        while any(len(w) for g in self.config.groups for w in g.wqs) or any(
-            s.busy for slots in self._slots.values() for s in slots
+        """Run until WQs, PE slots, AND locally-resolvable fences are empty.
+        Deferred descriptors whose dependencies live on another engine are
+        left for Device.drain(), which pumps every instance."""
+        while (
+            any(len(w) for g in self.config.groups for w in g.wqs)
+            or any(s.busy for slots in self._slots.values() for s in slots)
+            or any(all(d.is_done() for d in deps) for *_, deps, _rec in self._deferred)
         ):
             self.kick()
             for slots in self._slots.values():

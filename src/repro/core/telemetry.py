@@ -2,17 +2,21 @@
 telemetry functionalities are provided by the PCM library ... inbound-
 outbound traffic and request count on each DSA instance").
 
-Counters per engine instance: per-op counts/bytes/latency, WQ occupancy
-samples, PE busy fractions, retry totals.  ``report()`` renders the
-PCM-style table; ``snapshot()`` returns a dict for programmatic use.
+Counters per engine instance: per-op x size-class counts/bytes/latency, WQ
+occupancy samples, retry totals.  When attached to a ``Device``, the
+snapshot also attributes submissions per policy decision (which instance
+the SubmitPolicy routed each op to, plus backoff pressure).  ``report()``
+renders the PCM-style table; ``snapshot()`` returns a dict for
+programmatic use.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import defaultdict
-from typing import Dict, List
+from typing import List, Optional, Union
 
+from repro.core.device import Device
 from repro.core.engine import StreamEngine
 
 
@@ -25,14 +29,21 @@ class OpCounter:
 
 
 class Telemetry:
-    """Attach to one or more engines; samples are taken on poll()."""
+    """Attach to a Device (preferred) or a list of engines; samples are
+    taken on poll()/sample()."""
 
-    def __init__(self, engines: List[StreamEngine]):
-        self.engines = engines
-        self.ops: Dict[str, Dict[str, OpCounter]] = {
-            e.name: defaultdict(OpCounter) for e in engines
-        }
-        self.wq_samples: Dict[str, List[float]] = {e.name: [] for e in engines}
+    def __init__(self, engines: Union["Device", List[StreamEngine], None] = None,
+                 device: Optional["Device"] = None):
+        if device is None and engines is not None and hasattr(engines, "engines"):
+            device = engines  # Telemetry(device) convenience form
+        if device is not None:
+            self.device = device
+            self.engines = list(device.engines)
+        else:
+            self.device = None
+            self.engines = list(engines or [])
+        self.ops = {e.name: defaultdict(OpCounter) for e in self.engines}
+        self.wq_samples = {e.name: [] for e in self.engines}
         self._seen: set = set()
         self.t0 = time.perf_counter()
 
@@ -44,9 +55,9 @@ class Telemetry:
                 if desc_id in self._seen or not rec.is_done():
                     continue
                 self._seen.add(desc_id)
-                # op name from record payload is not retained; bucket by size class
-                bucket = _size_bucket(rec.bytes_processed)
-                c = self.ops[e.name][bucket]
+                # the record carries its op type; bucket per op x size class
+                key = f"{rec.op or '?'}/{_size_bucket(rec.bytes_processed)}"
+                c = self.ops[e.name][key]
                 c.count += 1
                 c.bytes += rec.bytes_processed
                 c.modeled_us += rec.modeled_time_us
@@ -67,6 +78,15 @@ class Telemetry:
                     k: dataclasses.asdict(v) for k, v in sorted(self.ops[e.name].items())
                 },
             }
+        if self.device is not None:
+            ps = self.device.policy_stats
+            out["policy"] = {
+                "name": ps["policy"],
+                "decisions": dict(ps["decisions"]),
+                "decisions_by_op": dict(ps["decisions_by_op"]),
+                "backoff_retries": ps["backoff_retries"],
+                "queue_full": ps["queue_full"],
+            }
         return out
 
     def report(self) -> str:
@@ -77,12 +97,19 @@ class Telemetry:
                 f"  {name}: submitted={e['submitted']} retries={e['retries']} "
                 f"wq_occ={e['mean_wq_occupancy']:.2f}"
             )
-            for bucket, c in e["ops"].items():
+            for key, c in e["ops"].items():
                 gbps = c["bytes"] / max(c["modeled_us"] * 1e-6, 1e-12) / 1e9
                 lines.append(
-                    f"    {bucket:>8s}: n={c['count']:<5d} bytes={c['bytes']:<12d} "
+                    f"    {key:>20s}: n={c['count']:<5d} bytes={c['bytes']:<12d} "
                     f"modeled={c['modeled_us']:.1f}us ({gbps:.1f}GB/s projected)"
                 )
+        pol = snap.get("policy")
+        if pol:
+            placed = ", ".join(f"{k}={v}" for k, v in sorted(pol["decisions"].items()))
+            lines.append(
+                f"  policy {pol['name']}: placements [{placed or 'none'}] "
+                f"backoff_retries={pol['backoff_retries']} queue_full={pol['queue_full']}"
+            )
         return "\n".join(lines)
 
 

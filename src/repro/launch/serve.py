@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import make_stream
+from repro.core import make_device
 from repro.models.api import build_model
 from repro.serving.pipeline import Request, VhostStyleServer
 
@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-cache", type=int, default=128)
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--policy", default="least_loaded",
+                    choices=["round_robin", "least_loaded", "sticky"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,7 +36,7 @@ def main():
     params = model.init(jax.random.key(args.seed))
     server = VhostStyleServer(
         model, params, slots=args.slots, max_cache_len=args.max_cache,
-        stream=make_stream(n_instances=2),
+        device=make_device(n_instances=args.instances, policy=args.policy),
     )
 
     rng = np.random.default_rng(args.seed)
@@ -47,9 +50,12 @@ def main():
     steps = server.run_until_drained()
     dt = time.perf_counter() - t0
     m = server.metrics
+    ps = server.device.policy_stats
+    placed = ", ".join(f"{k}={v}" for k, v in sorted(ps["decisions"].items()))
     print(f"served {m['completed']}/{args.requests} requests in {steps} pipeline steps, "
           f"{dt:.2f}s; decoded {m['decoded_tokens']} tokens "
-          f"({m['decoded_tokens']/dt:.1f} tok/s); copy bursts {m['copy_bursts']}")
+          f"({m['decoded_tokens']/dt:.1f} tok/s); copy bursts {m['copy_bursts']}; "
+          f"policy {ps['policy']} placements [{placed}]")
     assert m["completed"] == args.requests
 
 

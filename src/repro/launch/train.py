@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
+from repro.core import make_device
 from repro.data.pipeline import Prefetcher, SyntheticLMDataset
 from repro.distributed.annotate import use_rules
 from repro.distributed.fault import Heartbeat, StragglerDetector, run_with_restarts
@@ -42,9 +43,14 @@ def train(args) -> int:
         donate_argnums=(0, 1),
     )
 
+    # checkpoint traffic (kernel CRCs when enabled) shares one engine pool
+    device = make_device(n_instances=getattr(args, "instances", 1),
+                         policy=getattr(args, "policy", "round_robin"))
     ckpt = CheckpointManager(
         CheckpointConfig(directory=args.ckpt_dir, full_every=args.full_every,
-                         replicas=args.replicas, async_save=True)
+                         replicas=args.replicas, async_save=True,
+                         crc_impl=getattr(args, "crc_impl", "zlib")),
+        device=device,
     )
     dataset = SyntheticLMDataset(cfg, args.batch, args.seq, seed=args.seed)
     hb = Heartbeat(str(Path(args.ckpt_dir) / "hb"), rank=0)
@@ -108,6 +114,10 @@ def main():
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--instances", type=int, default=1)
+    ap.add_argument("--policy", default="round_robin",
+                    choices=["round_robin", "least_loaded", "sticky"])
+    ap.add_argument("--crc-impl", default="zlib", choices=["zlib", "kernel"])
     args = ap.parse_args()
     train(args)
 

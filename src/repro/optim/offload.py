@@ -16,8 +16,8 @@ from typing import Any, Dict, Tuple
 
 import jax
 
-from repro.core.api import Stream
 from repro.core.descriptor import OpType, WorkDescriptor
+from repro.core.device import Device, Future
 from repro.core.perfmodel import DEFAULT_MODEL, TIERS
 
 
@@ -49,27 +49,38 @@ def plan(opt_state, fraction: float = 1.0, model=DEFAULT_MODEL) -> OffloadPlan:
 
 class MomentOffloader:
     """Round-trips the moment trees through the engine, leaf by leaf
-    (each leaf is one descriptor; the whole tree is one batch descriptor)."""
+    (each leaf is one descriptor; the whole tree is one batch descriptor).
 
-    def __init__(self, stream: Stream):
-        self.stream = stream
+    Moves are asynchronous: ``_move_tree_async`` returns a Future that
+    resolves to the reassembled tree (``.then`` re-unflattens on retire),
+    so the m-tree and v-tree round-trips overlap (G2: async always)."""
+
+    def __init__(self, device: Device):
+        self.device = device
         self.stats = {"offloads": 0, "fetches": 0, "bytes_moved": 0}
 
-    def _move_tree(self, tree: Any) -> Any:
+    def _move_tree_async(self, tree: Any) -> Future:
         leaves, treedef = jax.tree.flatten(tree)
         descs = [WorkDescriptor(op=OpType.MEMCPY, src=x) for x in leaves]
-        outs = self.stream.wait(self.stream.batch_async(descs))
-        if len(descs) == 1:
-            outs = [outs] if not isinstance(outs, list) else outs
         self.stats["bytes_moved"] += sum(d.nbytes for d in descs)
-        return jax.tree.unflatten(treedef, outs)
+        fut = self.device.batch_async(descs, producer="moment-offload")
+
+        def reassemble(outs):
+            if len(descs) == 1 and not isinstance(outs, list):
+                outs = [outs]
+            return jax.tree.unflatten(treedef, outs)
+
+        return fut.then(reassemble)
+
+    def _move_both(self, opt_state):
+        fm = self._move_tree_async(opt_state.m)
+        fv = self._move_tree_async(opt_state.v)  # in flight together
+        return opt_state._replace(m=fm.result(), v=fv.result())
 
     def offload(self, opt_state):
         self.stats["offloads"] += 1
-        return opt_state._replace(m=self._move_tree(opt_state.m),
-                                  v=self._move_tree(opt_state.v))
+        return self._move_both(opt_state)
 
     def fetch(self, opt_state):
         self.stats["fetches"] += 1
-        return opt_state._replace(m=self._move_tree(opt_state.m),
-                                  v=self._move_tree(opt_state.v))
+        return self._move_both(opt_state)

@@ -37,7 +37,7 @@ class PagedKVPool:
     batch_copy rides the DMA engine."""
 
     def __init__(self, n_device_pages: int, n_host_pages: int, page_tokens: int,
-                 kv_dim: int, dtype=jnp.bfloat16, stream=None):
+                 kv_dim: int, dtype=jnp.bfloat16, device=None):
         self.page_tokens = page_tokens
         self.kv_dim = kv_dim
         self.device_pool = jnp.zeros((n_device_pages, page_tokens, kv_dim), dtype)
@@ -46,7 +46,7 @@ class PagedKVPool:
         self._free_host = list(range(n_host_pages))[::-1]
         # seq_id -> list of (tier, page_idx) in order
         self.page_table: Dict[int, List[Tuple[str, int]]] = {}
-        self.stream = stream
+        self.device = device  # optional Device: swaps become engine descriptors
         self.stats = PoolStats()
 
     # ------------------------------------------------------------------ alloc
@@ -86,6 +86,13 @@ class PagedKVPool:
         return jnp.concatenate(out, axis=0)
 
     # ------------------------------------------------------------------ tier moves (batch descriptors)
+    def _batch_copy(self, src_pool, dst_pool, src_idx, dst_idx):
+        if self.device is not None:
+            return self.device.batch_copy_async(
+                src_pool, dst_pool, src_idx, dst_idx, producer="kv-pool"
+            ).result()
+        return kops.batch_copy(src_pool, dst_pool, src_idx, dst_idx)
+
     def swap_out(self, seq_id: int) -> bool:
         """Device -> host, all pages of a sequence in ONE batch descriptor."""
         entries = self.page_table.get(seq_id, [])
@@ -97,7 +104,7 @@ class PagedKVPool:
         host_pages = [self._free_host.pop() for _ in dev]
         src_idx = jnp.asarray([p for _, p in dev], jnp.int32)
         dst_idx = jnp.asarray(host_pages, jnp.int32)
-        self.host_pool = kops.batch_copy(self.device_pool, self.host_pool, src_idx, dst_idx)
+        self.host_pool = self._batch_copy(self.device_pool, self.host_pool, src_idx, dst_idx)
         for (slot, p), hp in zip(dev, host_pages):
             entries[slot] = ("host", hp)
             self._free_device.append(p)
@@ -118,7 +125,7 @@ class PagedKVPool:
         dev_pages = [self._free_device.pop() for _ in host]
         src_idx = jnp.asarray([p for _, p in host], jnp.int32)
         dst_idx = jnp.asarray(dev_pages, jnp.int32)
-        self.device_pool = kops.batch_copy(self.host_pool, self.device_pool, src_idx, dst_idx)
+        self.device_pool = self._batch_copy(self.host_pool, self.device_pool, src_idx, dst_idx)
         for (slot, p), dp in zip(host, dev_pages):
             entries[slot] = ("device", dp)
             self._free_host.append(p)

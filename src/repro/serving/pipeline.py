@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OpType, Status, Stream, WorkDescriptor
+from repro.core import Device, OpType, Status, WorkDescriptor
 from repro.core.descriptor import BatchDescriptor
 
 
@@ -42,20 +42,21 @@ class Request:
 
 
 class ReorderArray:
-    """In-order commit over out-of-order completions (paper Fig. 16a)."""
+    """In-order commit over out-of-order completions (paper Fig. 16a).
+    Entries are Futures (anything with ``is_done()``)."""
 
     def __init__(self, size: int = 128):
         self.size = size
-        self._entries: deque = deque()  # (tag, record, payload)
+        self._entries: deque = deque()  # (tag, future, payload)
 
-    def push(self, tag: int, record, payload: Any):
-        self._entries.append((tag, record, payload))
+    def push(self, tag: int, future, payload: Any):
+        self._entries.append((tag, future, payload))
 
     def pop_completed(self) -> List[Tuple[int, Any]]:
         """Commit the longest completed PREFIX (in-order semantics)."""
         out = []
         while self._entries and self._entries[0][1].is_done():
-            tag, rec, payload = self._entries.popleft()
+            tag, fut, payload = self._entries.popleft()
             out.append((tag, payload))
         return out
 
@@ -67,14 +68,21 @@ class VhostStyleServer:
     """Greedy-decode continuous batching over a DecoderModel."""
 
     def __init__(self, model, params, *, slots: int = 4, max_cache_len: int = 256,
-                 stream: Optional[Stream] = None, burst: int = 32):
+                 device: Optional[Device] = None, burst: int = 32,
+                 stream: Optional[Device] = None):
         from repro.launch.steps import make_decode_step, make_prefill_step
 
+        if device is None and stream is not None:  # deprecated alias
+            import warnings
+
+            warnings.warn("VhostStyleServer(stream=...) is deprecated; pass device=",
+                          DeprecationWarning, stacklevel=2)
+            device = stream
         self.model = model
         self.params = params
         self.slots = slots
         self.max_cache_len = max_cache_len
-        self.stream = stream or Stream()
+        self.device = device or Device()
         self.burst = burst
         self.reorder = ReorderArray()
         self.queue: deque = deque()
@@ -94,8 +102,7 @@ class VhostStyleServer:
 
     # ------------------------------------------------------------------ stage 1: poll + in-order commit
     def _stage_poll_commit(self):
-        for eng in self.stream.engines:  # UMWAIT poll: retire finished copies
-            eng.kick()
+        self.device.kick()  # UMWAIT poll: retire finished copies
         for _, payload in self.reorder.pop_completed():
             slot, req = payload
             self._admit_now(slot, req)
@@ -124,8 +131,10 @@ class VhostStyleServer:
                 WorkDescriptor(op=OpType.MEMCPY, src=jnp.asarray(np.ascontiguousarray(c)))
                 for c in chunks[: self.burst]
             ]
-            _, rec = self.stream.batch_async(descs)
-            self.reorder.push(self._tag, rec, (slot, req))
+            fut = self.device.batch_async(descs, producer=f"slot{slot}")
+            if isinstance(fut, tuple):  # legacy Stream shim: (engine, record)
+                fut = fut[1]
+            self.reorder.push(self._tag, fut, (slot, req))
             self._tag += 1
             self.metrics["copy_bursts"] += 1
 
@@ -160,7 +169,7 @@ class VhostStyleServer:
         while (self.queue or self.active or len(self.reorder)) and steps < max_steps:
             self.step()
             steps += 1
-        self.stream.drain()
+        self.device.drain()
         return steps
 
 

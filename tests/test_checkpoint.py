@@ -107,7 +107,7 @@ def test_elastic_restore_resharding(tmp_path, rng):
     """Save on one device layout, restore with explicit shardings."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     m = CheckpointManager(CheckpointConfig(directory=str(tmp_path), async_save=False))
     t = _tree(rng)
     m.save(1, t)
@@ -130,3 +130,24 @@ def test_kernel_crc_impl_equivalent(tmp_path, rng):
 
     want = zlib.crc32(np.asarray(t["w"]).tobytes()) & 0xFFFFFFFF
     assert man["leaves"]["w"]["crc"] == want
+
+
+def test_kernel_crc_routes_through_device(tmp_path, rng):
+    """With a Device attached, kernel CRCs are engine descriptors: they agree
+    with zlib AND show up in the device's submission telemetry."""
+    from repro.core import make_device
+
+    d = make_device()
+    t = {"w": jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)}
+    m = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path / "dev"), async_save=False,
+                         crc_impl="kernel"),
+        device=d,
+    )
+    m.save(1, t)
+    man = json.loads((tmp_path / "dev" / "step_00000001" / "manifest.json").read_text())
+    import zlib
+
+    want = zlib.crc32(np.asarray(t["w"]).tobytes()) & 0xFFFFFFFF
+    assert man["leaves"]["w"]["crc"] == want
+    assert d.policy_stats["decisions_by_op"].get("dsa0/crc32", 0) >= 1

@@ -118,7 +118,7 @@ def test_restart_policy_bounds():
 def test_compressed_psum_single_device():
     from repro.distributed.collectives import compressed_psum_tree
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)}
     red, fb = compressed_psum_tree(g, mesh, "data")
     # n=1: reduction is identity up to int8 quantization error
@@ -132,7 +132,7 @@ def test_compressed_psum_single_device():
 def test_ring_all_reduce_single_device():
     from repro.distributed.collectives import ring_all_reduce
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     x = jnp.arange(12.0).reshape(3, 4)
     y = ring_all_reduce(x, mesh, "data")
     assert np.allclose(np.asarray(y), np.asarray(x))
@@ -168,7 +168,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.roofline.hlo_cost import analyze_hlo
 
-mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("model",))
 w = jax.ShapeDtypeStruct((256, 512), jnp.float32, sharding=NamedSharding(mesh, P(None, "model")))
 x = jax.ShapeDtypeStruct((64, 256), jnp.float32, sharding=NamedSharding(mesh, P()))
 

@@ -9,13 +9,12 @@ from repro.core import (
     DeviceConfig,
     OpType,
     Status,
-    Stream,
     StreamEngine,
     WorkDescriptor,
     WorkQueue,
     dto,
     dto_enabled,
-    make_stream,
+    make_device,
 )
 
 
@@ -38,44 +37,46 @@ def test_dwq_owner_enforced():
 
 
 def test_async_submit_wait(rng):
-    s = make_stream()
+    d = make_device()
     x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
-    h = s.memcpy_async(x)
-    out = s.wait(h)
+    fut = d.memcpy_async(x)
+    out = fut.wait()
     assert np.allclose(np.asarray(out), np.asarray(x))
-    _, rec = h
-    assert rec.status == Status.SUCCESS
-    assert rec.bytes_processed == x.size * 4
-    assert rec.modeled_time_us > 0
+    assert fut.status == Status.SUCCESS
+    assert fut.record.bytes_processed == x.size * 4
+    assert fut.record.modeled_time_us > 0
+    assert fut.op == "memcpy"
 
 
 def test_engine_error_reported():
-    s = make_stream()
+    d = make_device()
     bad = WorkDescriptor(op=OpType.DELTA_APPLY, src=None, src_idx=None, src2=None)
-    eng, rec = s.submit(bad)
-    eng.drain()
-    assert rec.status == Status.ERROR and rec.error
+    fut = d.submit(bad)
+    d.drain()
+    assert fut.status == Status.ERROR and fut.error
+    with pytest.raises(RuntimeError):
+        fut.result()
 
 
 def test_batch_fusion_equals_individual(rng):
-    s = make_stream()
+    s = make_device()
     xs = [jnp.asarray(rng.normal(size=(8, 128)), jnp.float32) for _ in range(5)]
     descs = [WorkDescriptor(op=OpType.MEMCPY, src=x) for x in xs]
-    outs = s.wait(s.batch_async(descs))
+    outs = s.batch_async(descs).result()
     assert len(outs) == 5
     for o, x in zip(outs, xs):
         assert np.allclose(np.asarray(o), np.asarray(x))
 
 
 def test_mixed_batch(rng):
-    s = make_stream()
+    s = make_device()
     x = jnp.asarray(rng.integers(0, 2**31, 1024), jnp.uint32)
     descs = [
         WorkDescriptor(op=OpType.MEMCPY, src=x),
         WorkDescriptor(op=OpType.CRC32, src=x),
         WorkDescriptor(op=OpType.COMPARE, src=x, src2=x),
     ]
-    outs = s.wait(s.batch_async(descs))
+    outs = s.batch_async(descs).result()
     assert np.allclose(np.asarray(outs[0]), np.asarray(x))
     import zlib
 
@@ -104,16 +105,16 @@ def test_priority_arbitration():
 
 
 def test_multi_instance_round_robin(rng):
-    s = make_stream(n_instances=3)
+    s = make_device(n_instances=3, policy="round_robin")
     x = jnp.zeros((8, 128), jnp.float32)
     for _ in range(6):
-        s.wait(s.memcpy_async(x))
+        s.memcpy_async(x).wait()
     used = [e for e in s.engines if any(w.stats["submitted"] for g in e.config.groups for w in g.wqs)]
     assert len(used) == 3  # load balanced
 
 
 def test_dto_threshold(rng):
-    s = make_stream()
+    s = make_device()
     small = jnp.zeros((4,), jnp.float32)  # 16B < threshold
     big = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
     with dto_enabled(s, min_bytes=1024):
@@ -127,9 +128,45 @@ def test_dto_threshold(rng):
 
 
 def test_completion_record_timing_fields(rng):
-    s = make_stream()
+    s = make_device()
     x = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
-    _, rec = s.memcpy_async(x)
-    s.wait((s.engines[0], rec)) if False else s.drain()
-    assert rec.modeled_time_us > 0
-    assert rec.wall_time_us >= 0
+    fut = s.memcpy_async(x)
+    s.drain()
+    assert fut.record.modeled_time_us > 0
+    assert fut.record.wall_time_us >= 0
+
+
+def test_stream_shim_still_works(rng):
+    """The deprecated Stream facade keeps the (engine, record) handle API
+    for one release, with a DeprecationWarning."""
+    from repro.core import make_stream
+
+    with pytest.warns(DeprecationWarning):
+        s = make_stream(n_instances=2)
+    x = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    h = s.memcpy_async(x)
+    assert isinstance(h, tuple) and len(h) == 2
+    out = s.wait(h)
+    assert np.allclose(np.asarray(out), np.asarray(x))
+    eng, rec = h
+    assert rec.status == Status.SUCCESS
+
+
+def test_batch_fusion_respects_flags(rng):
+    """Mixed cache hints in a copy batch must NOT take the fused path with
+    shared flags — results still match the per-descriptor semantics."""
+    from repro.core import CacheHint
+
+    s = make_device()
+    xs = [jnp.asarray(rng.normal(size=(8, 128)), jnp.float32) for _ in range(4)]
+    descs = [
+        WorkDescriptor(
+            op=OpType.MEMCPY, src=x,
+            cache_hint=CacheHint.TO_CACHE if i % 2 else CacheHint.TO_MEMORY,
+        )
+        for i, x in enumerate(xs)
+    ]
+    outs = s.batch_async(descs).result()
+    assert len(outs) == 4
+    for o, x in zip(outs, xs):
+        assert np.allclose(np.asarray(o), np.asarray(x))

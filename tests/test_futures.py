@@ -1,0 +1,289 @@
+"""The Device/Future submission API: chaining, callbacks, dependency
+fences (``after=``), submit policies, and bounded RETRY backoff."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Device,
+    DeviceConfig,
+    GroupConfig,
+    LeastLoadedPolicy,
+    OpType,
+    QueueFull,
+    Status,
+    StreamEngine,
+    WorkDescriptor,
+    WorkQueue,
+    get_policy,
+    make_device,
+)
+
+
+def _desc(x=None):
+    return WorkDescriptor(op=OpType.MEMCPY,
+                          src=x if x is not None else jnp.zeros((8, 128), jnp.float32))
+
+
+def _stalled_device(wq_size: int = 2, max_retries: int = 3) -> Device:
+    """A device whose single engine has ZERO PEs: nothing ever drains, so
+    the WQ genuinely fills and stays full."""
+    cfg = DeviceConfig(groups=[
+        GroupConfig("g0", [WorkQueue("wq0", mode="shared", size=wq_size)], n_pes=0)
+    ])
+    return Device([StreamEngine(cfg, name="stalled")],
+                  max_retries=max_retries, backoff_base_s=1e-6)
+
+
+# --------------------------------------------------------------------------- futures
+def test_future_result_roundtrip(rng):
+    d = make_device()
+    x = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    fut = d.memcpy_async(x)
+    assert np.allclose(np.asarray(fut.result()), np.asarray(x))
+    assert fut.done() and fut.status == Status.SUCCESS
+    assert fut.op == "memcpy"
+
+
+def test_then_chains_transform(rng):
+    d = make_device()
+    x = jnp.asarray(rng.integers(0, 2**31, 1024), jnp.uint32)
+    import zlib
+
+    fut = d.crc32_async(x).then(lambda c: f"0x{int(c):08x}")
+    expect = zlib.crc32(np.asarray(x, "<u4").tobytes()) & 0xFFFFFFFF
+    assert fut.result() == f"0x{expect:08x}"
+
+
+def test_then_of_then_and_error_propagation():
+    d = make_device()
+    bad = d.submit(WorkDescriptor(op=OpType.DELTA_APPLY, src=None, src_idx=None, src2=None))
+    chained = bad.then(lambda v: v).then(lambda v: v)
+    d.drain()
+    assert chained.poll()
+    assert chained.status == Status.ERROR
+    with pytest.raises(RuntimeError):
+        chained.result()
+
+
+def test_then_fn_exception_marks_error(rng):
+    d = make_device()
+    fut = d.memcpy_async(jnp.zeros((8, 128), jnp.float32)).then(
+        lambda v: (_ for _ in ()).throw(ValueError("boom"))
+    )
+    with pytest.raises(RuntimeError, match="boom"):
+        fut.result()
+
+
+def test_done_callbacks_fire_in_order(rng):
+    d = make_device()
+    order = []
+    fut = d.memcpy_async(jnp.zeros((8, 128), jnp.float32))
+    fut.add_done_callback(lambda f: order.append("a"))
+    fut.add_done_callback(lambda f: order.append("b"))
+    fut.wait()
+    # late registration runs immediately, after the earlier ones
+    fut.add_done_callback(lambda f: order.append("c"))
+    assert order == ["a", "b", "c"]
+
+
+def test_callbacks_fire_once(rng):
+    d = make_device()
+    count = []
+    fut = d.memcpy_async(jnp.zeros((8, 128), jnp.float32))
+    fut.add_done_callback(lambda f: count.append(1))
+    fut.wait()
+    fut.wait()
+    fut.poll()
+    assert len(count) == 1
+
+
+# --------------------------------------------------------------------------- fences
+def test_after_fence_defers_until_parent_retires():
+    """A dependent descriptor must NOT launch before its parent resolves:
+    gate the parent on a promise and watch the chain."""
+    d = make_device()
+    gate = d.promise()
+    x = jnp.full((8, 128), 3.0, jnp.float32)
+    child = d.memcpy_async(x, after=[gate])
+    for _ in range(3):
+        d.kick()
+    assert not child.done()
+    assert child.status == Status.PENDING  # held in the engine's fence list
+    eng = child.engine
+    assert len(eng._deferred) == 1  # parked, not in a WQ / PE
+    gate.set_result(None)
+    out = child.result()
+    assert np.allclose(np.asarray(out), 3.0)
+    assert not eng._deferred
+
+
+def test_after_accepts_future_chain(rng):
+    d = make_device()
+    x = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    first = d.memcpy_async(x)
+    second = d.memcpy_async(x, after=[first])
+    third = d.memcpy_async(x, after=[first, second])
+    assert np.allclose(np.asarray(third.result()), np.asarray(x))
+    assert first.done() and second.done()
+
+
+def test_failed_dependency_fails_dependent():
+    d = make_device()
+    gate = d.promise()
+    child = d.memcpy_async(jnp.zeros((8, 128), jnp.float32), after=[gate])
+    gate.set_error("upstream torn")
+    d.kick()
+    assert child.status == Status.ERROR
+    assert "dependency failed" in (child.error or "")
+    with pytest.raises(RuntimeError):
+        child.result()
+
+
+def test_already_failed_dependency_rejected_at_submit():
+    d = make_device()
+    bad = d.submit(WorkDescriptor(op=OpType.DELTA_APPLY, src=None, src_idx=None, src2=None))
+    d.drain()
+    assert bad.status == Status.ERROR
+    child = d.memcpy_async(jnp.zeros((8, 128), jnp.float32), after=[bad])
+    assert child.status == Status.ERROR
+
+
+def test_drain_resolves_cross_engine_fences(rng):
+    """Parent on dsa0, child fenced on it lands on dsa1: Device.drain pumps
+    both instances until the fence releases."""
+    d = make_device(n_instances=2, policy="round_robin")
+    x = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    parent = d.memcpy_async(x)
+    child = d.memcpy_async(x, after=[parent])
+    d.drain()
+    assert parent.done() and child.done()
+    assert parent.engine is not child.engine or len(d.engines) == 1
+
+
+# --------------------------------------------------------------------------- policies
+def test_round_robin_spreads(rng):
+    d = make_device(n_instances=3, policy="round_robin")
+    x = jnp.zeros((8, 128), jnp.float32)
+    for _ in range(6):
+        d.memcpy_async(x).wait()
+    assert sorted(d.policy_stats["decisions"].values()) == [2, 2, 2]
+
+
+def test_least_loaded_avoids_hot_instance():
+    d = make_device(n_instances=2, policy="least_loaded")
+    hot, cold = d.engines
+    # preload the hot instance's WQ without kicking (raw portal writes)
+    for _ in range(4):
+        hot.wq(0, 0).submit(_desc())
+    placed = LeastLoadedPolicy().select(d.engines, _desc(), None)
+    assert placed is cold
+    fut = d.memcpy_async(jnp.zeros((8, 128), jnp.float32))
+    assert fut.engine is cold
+    d.drain()
+
+
+def test_sticky_policy_pins_producer():
+    d = make_device(n_instances=4, policy="sticky")
+    x = jnp.zeros((8, 128), jnp.float32)
+    futs = [d.memcpy_async(x, producer="worker-7") for _ in range(5)]
+    engines = {f.engine.name for f in futs}
+    assert len(engines) == 1  # per-producer affinity
+    other = d.memcpy_async(x, producer="worker-3")
+    d.drain()
+    # a different producer may land elsewhere; same producer never moves
+    again = d.memcpy_async(x, producer="worker-7")
+    assert again.engine.name in engines
+    d.drain()
+
+
+def test_get_policy_validates():
+    with pytest.raises(ValueError, match="unknown submit policy"):
+        get_policy("best_effort")
+    p = LeastLoadedPolicy()
+    assert get_policy(p) is p
+
+
+# --------------------------------------------------------------------------- backoff
+def test_queue_full_after_bounded_backoff():
+    d = _stalled_device(wq_size=2, max_retries=3)
+    x = jnp.zeros((8, 128), jnp.float32)
+    d.memcpy_async(x)
+    d.memcpy_async(x)  # WQ now full; no PEs will ever drain it
+    with pytest.raises(QueueFull) as ei:
+        d.memcpy_async(x)
+    assert ei.value.attempts == 4  # initial try + max_retries backoffs
+    assert d.policy_stats["queue_full"] == 1
+    assert d.policy_stats["backoff_retries"] >= 3
+
+
+def test_backoff_succeeds_when_queue_drains(rng):
+    """RETRY converts to backoff, not failure, when capacity frees up."""
+    d = make_device(wqs_per_group=1, wq_size=2, wq_mode="shared")
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    futs = [d.memcpy_async(x) for _ in range(12)]  # >> wq_size
+    for f in futs:
+        assert np.allclose(np.asarray(f.result()), np.asarray(x))
+    assert d.policy_stats["queue_full"] == 0
+
+
+def test_fence_list_is_bounded():
+    """Deferred (after=) submissions can't grow without bound: past
+    max_deferred the engine answers RETRY, so Device backoff/QueueFull
+    applies to the fence path too."""
+    d = make_device(wqs_per_group=1, wq_size=2)
+    d.max_retries = 2
+    d.backoff_base_s = 1e-6
+    eng = d.engines[0]
+    eng.max_deferred = 3
+    gate = d.promise()
+    x = jnp.zeros((8, 128), jnp.float32)
+    for _ in range(3):
+        d.memcpy_async(x, after=[gate])
+    with pytest.raises(QueueFull):
+        d.memcpy_async(x, after=[gate])
+    assert len(eng._deferred) == 3
+    gate.set_result(None)
+    d.drain()
+    assert not eng._deferred
+
+
+def test_stream_shim_never_raises_queuefull(rng):
+    """Legacy Stream callers predate QueueFull: the shim keeps the old
+    spin-until-accepted ENQCMD semantics."""
+    from repro.core import make_stream
+
+    with pytest.warns(DeprecationWarning):
+        s = make_stream(wqs_per_group=1, wq_size=2, wq_mode="shared")
+    s.max_retries = 1
+    s.backoff_base_s = 1e-6
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    handles = [s.memcpy_async(x) for _ in range(10)]  # >> wq_size, no raise
+    for h in handles:
+        assert np.allclose(np.asarray(s.wait(h)), np.asarray(x))
+
+
+def test_shared_device_across_threads(rng):
+    """Two threads submitting through one Device (the async-checkpoint
+    pattern) must not lose completions."""
+    import threading
+
+    d = make_device(n_instances=2)
+    x = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    errors = []
+
+    def worker():
+        try:
+            for _ in range(20):
+                assert np.allclose(np.asarray(d.memcpy_async(x).result()),
+                                   np.asarray(x))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors
+    assert sum(d.policy_stats["decisions"].values()) == 40

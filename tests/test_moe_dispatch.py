@@ -17,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import MoEConfig
 from repro.models import moe as M
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 cfg = MoEConfig(num_experts=8, top_k=2, d_ff_expert=32, num_shared_experts=1,
                 capacity_factor=8.0)
 D = 16

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_stream
+from repro.core import make_device
 from repro.optim.adamw import AdamW
 from repro.optim.offload import MomentOffloader, plan
 
@@ -29,7 +29,7 @@ def test_plan_math(rng):
 
 def test_moment_roundtrip_through_engine(rng):
     _, _, st = _state(rng)
-    off = MomentOffloader(make_stream())
+    off = MomentOffloader(make_device(n_instances=2, policy="least_loaded"))
     parked = off.offload(st)
     back = off.fetch(parked)
     for a, b in zip(jax.tree.leaves(st.m), jax.tree.leaves(back.m)):

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import make_stream
+from repro.core import make_device
 from repro.models.api import build_model
 from repro.serving.kv_pool import PagedKVPool
 from repro.serving.pipeline import ReorderArray, Request, VhostStyleServer
@@ -69,7 +69,7 @@ def test_vhost_server_end_to_end(rng):
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(0))
     server = VhostStyleServer(model, params, slots=3, max_cache_len=64,
-                              stream=make_stream(n_instances=2))
+                              device=make_device(n_instances=2))
     n_req = 7
     for i in range(n_req):
         server.enqueue(Request(req_id=i,

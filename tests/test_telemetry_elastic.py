@@ -6,20 +6,20 @@ from pathlib import Path
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_stream
+from repro.core import make_device
 from repro.core.telemetry import Telemetry
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
 
 def test_telemetry_counters(rng):
-    s = make_stream(n_instances=2)
-    tele = Telemetry(s.engines)
+    d = make_device(n_instances=2)
+    tele = Telemetry(d)  # device-attached: per-op rows + policy attribution
     big = jnp.asarray(rng.normal(size=(1024, 128)), jnp.float32)  # 512KB
     small = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)  # 4KB
     for _ in range(3):
-        s.wait(s.memcpy_async(big))
-        s.wait(s.memcpy_async(small))
+        d.memcpy_async(big).wait()
+        d.crc32_async(small).wait()
         tele.sample()
     snap = tele.snapshot()
     total_ops = sum(
@@ -30,7 +30,15 @@ def test_telemetry_counters(rng):
     )
     assert total_ops == 6
     assert total_bytes == 3 * (big.size + small.size) * 4
+    # per-op attribution: the op name is carried on the completion record
+    keys = {k for e in snap["engines"].values() for k in e["ops"]}
+    assert any(k.startswith("memcpy/") for k in keys)
+    assert any(k.startswith("crc32/") for k in keys)
+    # per-policy-decision attribution
+    assert snap["policy"]["name"] == "round_robin"
+    assert sum(snap["policy"]["decisions"].values()) == 6
     assert "projected" in tele.report()
+    assert "policy round_robin" in tele.report()
 
 
 ELASTIC_SCRIPT = r"""
@@ -47,13 +55,13 @@ tree = {"w": jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),
         "b": jnp.ones((32,), jnp.bfloat16)}
 
 # save on a (2,2) mesh with w sharded 2-way
-mesh_a = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_a = jax.make_mesh((2, 2), ("data", "model"))
 w_a = jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model")))
 m = CheckpointManager(CheckpointConfig(directory=d, async_save=False))
 m.save(1, {"w": w_a, "b": tree["b"]})
 
 # restore onto a DIFFERENT mesh shape (4,2) with a different layout
-mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = jax.make_mesh((4, 2), ("data", "model"))
 sh = {"w": NamedSharding(mesh_b, P("model", "data")), "b": NamedSharding(mesh_b, P())}
 step, restored = m.restore(shardings=sh, treedef_like=tree)
 assert step == 1
