@@ -1,24 +1,32 @@
-"""Paper Figs. 12-13: cache pollution from co-running streaming copies.
+"""Paper Figs. 12-13: cache steering of completions/destinations and the
+pollution it causes for co-running latency-sensitive work.
 
 TPU adaptation (G3): DSA's cache-control flag maps to destination memory-
-space steering — streaming data held out of VMEM working sets.  There is no
-shared LLC between "cores" on a TPU chip, so the contention model is the
-VMEM/HBM analogue: a co-running software copy consumes vector-unit issue
-slots AND evicts VMEM-resident tiles, inflating the latency-sensitive
-kernel's effective memory time; an engine (DMA) copy consumes only HBM
-bandwidth.
+space steering — a WQ provisioned with ``traffic_class="to_cache"``
+(WQConfig) steers destination writes to the VMEM/LLC tier, the DDIO
+analogue; ``to_memory`` writes around the cache.  There is no shared LLC
+between "cores" on a TPU chip, so the contention model is the VMEM/HBM
+analogue: a co-running software copy consumes vector-unit issue slots AND
+evicts VMEM-resident tiles, inflating the latency-sensitive kernel's
+effective memory time; an engine (DMA) copy steered to memory consumes only
+HBM bandwidth.
 
 Model: latency-sensitive kernel with working set W against co-running copy
 traffic C: sw-copy contention evicts min(W, C)/W of the working set to HBM;
 engine-copy only shares HBM bandwidth.  Claims validated: the paper's 43%
 latency inflation at 4MB working set with software copies, and ~none with
-offload.
+offload; and Fig. 12's two-sided steering result — to_cache completions are
+faster for the consumer while the steered stream fits the LLC share, but
+a stream larger than that share pollutes like a software copy.
 """
 from __future__ import annotations
 
 from typing import List
 
+import jax.numpy as jnp
+
 from benchmarks.common import Row
+from repro.core import WQConfig, make_device
 
 VMEM = 128 * 2**20 / 16  # per-core VMEM share analogue (8MB)
 HBM_LAT = 1.0  # normalized HBM access cost
@@ -29,11 +37,20 @@ EVICT_FRAC = 0.13  # cache fraction thrashed by co-running software copies
 
 WORKING_SETS = [1 << 20, 4 << 20, 16 << 20, 64 << 20]
 
+#: steered stream sizes for the Fig. 12 sweep (fits LLC share ... 4x over)
+STEERED_STREAMS = [1 << 20, 4 << 20, 8 << 20, 32 << 20]
 
-def _latency(working_set: int, copies: str) -> float:
+
+def _latency(working_set: int, copies: str, steered_bytes: int = 0) -> float:
     fit = min(1.0, VMEM / working_set)
     if copies == "software":
         evict = min(1.0, (8 << 20) / working_set) * EVICT_FRAC
+        fit = fit * (1 - evict)
+    if copies == "engine_to_cache" and steered_bytes > VMEM:
+        # an engine stream steered to cache beyond the LLC share evicts the
+        # working set just like a software copy would (Fig. 12 downside)
+        spill = min(1.0, (steered_bytes - VMEM) / steered_bytes)
+        evict = min(1.0, (8 << 20) / working_set) * EVICT_FRAC * spill
         fit = fit * (1 - evict)
     base = fit * CACHE_LAT + (1 - fit) * HBM_LAT
     if copies != "none":
@@ -41,7 +58,33 @@ def _latency(working_set: int, copies: str) -> float:
     return base
 
 
-def rows() -> List[Row]:
+def _steering_rows() -> List[Row]:
+    """Run the same copy through a to_cache WQ and a to_memory WQ (WQConfig
+    traffic classes) and report the consumer-side modeled time: steering to
+    cache skips the HBM round trip for the consumer (faster) and the record
+    carries the steering target the telemetry attributes pollution to."""
+    dev = make_device(wq_configs=[
+        WQConfig("steer_cache", traffic_class="to_cache", size=32, priority=8),
+        WQConfig("steer_mem", traffic_class="to_memory", size=32, priority=8),
+    ])
+    out: List[Row] = []
+    for kb in (64, 1024):
+        src = jnp.zeros((kb * 2, 128), jnp.float32)  # kb KiB
+        t = {}
+        for wq in ("steer_cache", "steer_mem"):
+            fut = dev.memcpy_async(src, wq=wq)
+            fut.wait()
+            assert fut.steering == ("to_cache" if wq == "steer_cache" else "to_memory")
+            t[wq] = fut.record.modeled_time_us
+            out.append((f"fig12/steer/{wq}/{kb}KB", fut.record.modeled_time_us,
+                        f"steered={fut.steering}"))
+        out.append((f"fig12/steer/benefit/{kb}KB", 0.0,
+                    f"to_cache {t['steer_mem'] / max(t['steer_cache'], 1e-9):.2f}x "
+                    f"faster for consumer"))
+    return out
+
+
+def _pollution_rows() -> List[Row]:
     out: List[Row] = []
     for ws in WORKING_SETS:
         l_none = _latency(ws, "none")
@@ -52,8 +95,18 @@ def rows() -> List[Row]:
                     f"lat={l_sw:.3f} (+{(l_sw/l_none-1)*100:.0f}%)"))
         out.append((f"fig13/ws{ws>>20}MB/engine", 0.0,
                     f"lat={l_eng:.3f} (+{(l_eng/l_none-1)*100:.0f}%)"))
-    l_none = _latency(4 << 20, "none")
-    l_sw = _latency(4 << 20, "software")
+    # Fig. 12: to_cache steering pollutes once the stream exceeds the share
+    ws = 4 << 20
+    l_none = _latency(ws, "none")
+    for stream in STEERED_STREAMS:
+        l_steer = _latency(ws, "engine_to_cache", steered_bytes=stream)
+        out.append((f"fig12/steered{stream>>20}MB/ws4MB", 0.0,
+                    f"lat={l_steer:.3f} (+{(l_steer/l_none-1)*100:.0f}%)"))
+    l_sw = _latency(ws, "software")
     out.append(("fig13/claim/4MB_sw_inflation", 0.0,
                 f"{(l_sw/l_none-1)*100:.0f}% (paper: 43%)"))
     return out
+
+
+def rows() -> List[Row]:
+    return _steering_rows() + _pollution_rows()

@@ -27,7 +27,7 @@ from repro.core.device import (
 )
 from repro.core.engine import DeviceConfig, GroupConfig, StreamEngine
 from repro.core.perfmodel import DEFAULT_MODEL, EngineModel, TIERS
-from repro.core.queues import WorkQueue
+from repro.core.queues import TRAFFIC_CLASSES, WorkQueue, WQConfig
 
 __all__ = [
     "BatchDescriptor",
@@ -50,8 +50,10 @@ __all__ = [
     "StreamEngine",
     "SubmitPolicy",
     "TIERS",
+    "TRAFFIC_CLASSES",
     "WorkDescriptor",
     "WorkQueue",
+    "WQConfig",
     "dto",
     "dto_enabled",
     "get_policy",

@@ -105,6 +105,11 @@ class CompletionRecord:
     modeled_time_us: float = 0.0  # perfmodel estimate on the target TPU
     wall_time_us: float = 0.0  # measured host time (interpret mode)
     error: Optional[str] = None
+    # WQ QoS attribution (paper Fig. 9 / Fig. 12): which WQ dispatched the
+    # descriptor, how long it sat queued, and where completions were steered
+    wq: Optional[str] = None
+    queue_delay_us: float = 0.0
+    steering: Optional[str] = None  # "to_cache" | "to_memory"
 
     def is_done(self) -> bool:
         return self.status in (Status.SUCCESS, Status.ERROR, Status.OVERFLOW)

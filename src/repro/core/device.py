@@ -42,7 +42,7 @@ from repro.core.descriptor import (
     op_name,
 )
 from repro.core.engine import DeviceConfig, StreamEngine
-from repro.core.queues import Submittable
+from repro.core.queues import Submittable, WQConfig
 
 
 class QueueFull(RuntimeError):
@@ -85,6 +85,19 @@ class Future:
     @property
     def error(self) -> Optional[str]:
         return self.record.error
+
+    # -- WQ QoS attribution (stamped at dispatch; None/0 until then) ---------
+    @property
+    def wq(self) -> Optional[str]:
+        return self.record.wq
+
+    @property
+    def queue_delay_us(self) -> float:
+        return self.record.queue_delay_us
+
+    @property
+    def steering(self) -> Optional[str]:
+        return self.record.steering
 
     def done(self) -> bool:
         """Non-kicking completion check."""
@@ -336,9 +349,25 @@ class Device:
                  n_instances: int = 1,
                  policy: Union[str, SubmitPolicy, None] = "round_robin",
                  config: Optional[DeviceConfig] = None,
+                 wq_configs: Optional[Sequence[WQConfig]] = None,
+                 pes_per_group: int = 4,
                  max_retries: int = 10, backoff_base_s: float = 20e-6):
         if engines is not None:
+            if config is not None or wq_configs is not None:
+                raise ValueError("pass pre-built engines OR a config/wq_configs "
+                                 "to build them from, not both")
             self.engines = list(engines)
+        elif wq_configs is not None:
+            if config is not None:
+                raise ValueError("pass either config= or wq_configs=, not both")
+            # each instance gets its own WorkQueue objects from the same
+            # WQCFG records (configs are frozen and shareable; queues are
+            # per-instance state)
+            self.engines = [
+                StreamEngine(DeviceConfig.from_wq_configs(
+                    wq_configs, pes_per_group=pes_per_group), name=f"dsa{i}")
+                for i in range(n_instances)
+            ]
         else:
             self.engines = [
                 StreamEngine(config or DeviceConfig.default(), name=f"dsa{i}")
@@ -364,11 +393,18 @@ class Device:
 
     # ------------------------------------------------------------------ submit
     def submit(self, desc: Submittable, *, after: Optional[Sequence[Any]] = None,
-               group: int = 0, wq: int = 0, producer: Optional[str] = None) -> Future:
+               group: Optional[int] = None, wq: Union[int, str, None] = None,
+               priority: Optional[int] = None,
+               producer: Optional[str] = None) -> Future:
         """Submit one descriptor; returns its Future.
 
         ``after``: Futures / CompletionRecords this descriptor must not
         launch before (DSA batch-fence semantics across submissions).
+        ``wq``: target WQ as an index or a WQ name; ``priority`` steers to
+        the nearest-priority WQ when ``wq`` is not given (searching all
+        groups, or only ``group`` when one is pinned).  Both compose with
+        the SubmitPolicy (the policy picks the instance, the hint picks
+        the WQ on it) and with ``after=`` fences.
         Raises QueueFull when the target WQ stays full through every
         backoff attempt."""
         eng = self.policy.select(self.engines, desc, producer)
@@ -377,6 +413,7 @@ class Device:
         for attempt in range(self.max_retries + 1):
             with self._engine_lock:
                 status, rec = eng.submit(desc, group=group, wq=wq,
+                                         priority=priority,
                                          producer=producer, after=deps)
             if status != Status.RETRY:
                 with self._lock:
@@ -395,6 +432,14 @@ class Device:
     def promise(self) -> Promise:
         """A host-completed fence Future (see Promise)."""
         return Promise(self)
+
+    def has_wq(self, name: str) -> bool:
+        """True when every instance exposes a WQ with this name (safe to use
+        as a ``wq=`` hint regardless of which instance the policy picks)."""
+        return all(
+            any(w.name == name for g in e.config.groups for w in g.wqs)
+            for e in self.engines
+        )
 
     # ------------------------------------------------------------------ async ops
     def memcpy_async(self, src: jax.Array, **kw):
@@ -495,11 +540,23 @@ class Device:
 
 def make_device(n_instances: int = 1, *,
                 policy: Union[str, SubmitPolicy, None] = "round_robin",
+                wq_configs: Optional[Sequence[WQConfig]] = None,
                 max_retries: int = 10, backoff_base_s: float = 20e-6,
                 **cfg_kw) -> Device:
     """Build a Device over n fresh engine instances (Fig. 10 topology).
-    ``cfg_kw`` forwards to DeviceConfig.default (wqs_per_group, wq_size,
-    wq_mode, pes_per_group, n_groups)."""
+
+    ``wq_configs`` provisions each instance from WQCFG records (mode, size
+    partition, priority, traffic class — Fig. 9 knobs); otherwise ``cfg_kw``
+    forwards to DeviceConfig.default (wqs_per_group, wq_size, wq_mode,
+    pes_per_group, n_groups)."""
+    if wq_configs is not None:
+        pes = cfg_kw.pop("pes_per_group", 4)
+        if cfg_kw:
+            raise ValueError(f"wq_configs replaces default-config knobs; "
+                             f"unexpected {sorted(cfg_kw)}")
+        return Device(n_instances=n_instances, policy=policy,
+                      wq_configs=wq_configs, pes_per_group=pes,
+                      max_retries=max_retries, backoff_base_s=backoff_base_s)
     engines = [StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
                for i in range(n_instances)]
     return Device(engines, policy=policy, max_retries=max_retries,

@@ -2,8 +2,10 @@
 
 Maps the DSA execution pipeline (paper Fig. 1a) onto JAX:
 
-  WQs     -> bounded host-side queues (core/queues.py)
-  group   -> {WQs, PE slots, read-buffer share} with a priority arbiter
+  WQs     -> bounded host-side queues (core/queues.py), provisioned by
+             WQConfig (mode, size partition, priority 1-15, traffic class)
+  group   -> {WQs, PE slots, read-buffer share} with a priority-weighted
+             deficit arbiter (WQ -> group -> engine dispatch, Fig. 9)
   PE      -> an async in-flight kernel dispatch slot; "processing" a
              descriptor = dispatching its Pallas kernel (ops.py); JAX's
              async dispatch gives the overlap the paper gets from hardware
@@ -13,7 +15,10 @@ Maps the DSA execution pipeline (paper Fig. 1a) onto JAX:
 
 The engine is also a *model*: every completion record carries the projected
 TPU time from core/perfmodel.py next to the measured host time, which is
-what the paper-figure benchmarks plot.
+what the paper-figure benchmarks plot.  QoS enters the model in two places:
+a shared WQ charges the ENQCMD non-posted round trip per submission, and a
+WQ with ``traffic_class="to_cache"`` steers destination writes to the LLC /
+VMEM tier (DDIO analogue, Fig. 12).
 """
 from __future__ import annotations
 
@@ -34,7 +39,7 @@ from repro.core.descriptor import (
     op_name,
 )
 from repro.core.perfmodel import DEFAULT_MODEL, EngineModel
-from repro.core.queues import Submittable, WorkQueue
+from repro.core.queues import Submittable, WorkQueue, WQConfig
 from repro.kernels import dif as dif_ops
 from repro.kernels import ops
 
@@ -71,6 +76,27 @@ class DeviceConfig:
                 WorkQueue(f"g{g}wq{i}", mode=wq_mode, size=wq_size)
                 for i in range(wqs_per_group)
             ]
+            groups.append(GroupConfig(f"group{g}", wqs, n_pes=pes_per_group))
+        return DeviceConfig(groups=groups)
+
+    @staticmethod
+    def from_wq_configs(wq_configs: Sequence[WQConfig],
+                        pes_per_group: int = 4) -> "DeviceConfig":
+        """Build the WQ -> group topology from WQCFG records (Fig. 9 sweeps).
+        WQs with the same ``group`` index share that group's PEs and compete
+        under its priority arbiter; groups are created densely 0..max."""
+        if not wq_configs:
+            raise ValueError("wq_configs must name at least one WQConfig")
+        names = [c.name for c in wq_configs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate WQ names in wq_configs: {names}")
+        n_groups = max(c.group for c in wq_configs) + 1
+        groups = []
+        for g in range(n_groups):
+            wqs = [WorkQueue.from_config(c) for c in wq_configs if c.group == g]
+            if not wqs:
+                raise ValueError(f"wq_configs leaves group {g} empty; "
+                                 f"group indices must be dense")
             groups.append(GroupConfig(f"group{g}", wqs, n_pes=pes_per_group))
         return DeviceConfig(groups=groups)
 
@@ -116,7 +142,10 @@ class StreamEngine:
         self._slots: Dict[str, List[_PESlot]] = {
             g.name: [_PESlot() for _ in range(g.n_pes)] for g in self.config.groups
         }
-        self._rr: Dict[str, int] = {g.name: 0 for g in self.config.groups}
+        # deficit counters for priority-weighted draining (one per WQ)
+        self._credit: Dict[str, Dict[str, float]] = {
+            g.name: {w.name: 0.0 for w in g.wqs} for g in self.config.groups
+        }
         self.records: Dict[int, CompletionRecord] = {}
         # deferred submissions waiting on dependency fences:
         # (desc, group, wq, producer, deps, record)
@@ -131,13 +160,51 @@ class StreamEngine:
     def wq(self, group: int = 0, wq: int = 0) -> WorkQueue:
         return self.config.groups[group].wqs[wq]
 
-    def submit(self, desc: Submittable, group: int = 0, wq: int = 0,
+    def resolve_wq(self, group: Optional[int] = None,
+                   wq: Union[int, str, None] = None,
+                   priority: Optional[int] = None) -> Tuple[int, int]:
+        """Map per-submit hints to a (group, wq) index pair.
+
+        ``wq`` as a string selects by WQ name across ALL groups (the name
+        wins over ``group``).  ``wq=None`` with a ``priority`` hint picks
+        the WQ whose configured priority is nearest the hint (ties toward
+        the higher-priority WQ) — the QoS-level steer; an explicit
+        ``group=`` pins the priority search to that group (so WQs placed in
+        an isolation group never lose submissions to another group's WQs).
+        Plain ints keep the PR 1 behaviour; ``group=None`` means group 0
+        unless a priority hint widens the search."""
+        if isinstance(wq, str):
+            for gi, g in enumerate(self.config.groups):
+                for wi, w in enumerate(g.wqs):
+                    if w.name == wq:
+                        return gi, wi
+            known = [w.name for g in self.config.groups for w in g.wqs]
+            raise KeyError(f"no WQ named {wq!r} on {self.name}; have {known}")
+        if wq is None and priority is not None:
+            candidates = (
+                enumerate(self.config.groups) if group is None
+                else [(group, self.config.groups[group])]
+            )
+            best = min(
+                ((gi, wi, w) for gi, g in candidates
+                 for wi, w in enumerate(g.wqs)),
+                key=lambda t: (abs(t[2].priority - priority), -t[2].priority, t[0], t[1]),
+            )
+            return best[0], best[1]
+        return group or 0, int(wq or 0)
+
+    def submit(self, desc: Submittable, group: Optional[int] = None,
+               wq: Union[int, str, None] = None,
                producer: Optional[str] = None,
-               after: Optional[Sequence[Any]] = None) -> Tuple[Status, CompletionRecord]:
+               after: Optional[Sequence[Any]] = None,
+               priority: Optional[int] = None) -> Tuple[Status, CompletionRecord]:
         """Enqueue a descriptor.  ``after`` is a sequence of dependency fences
         (CompletionRecords or anything with ``is_done()``/``status``): the
         descriptor is held back — the DSA batch-fence analogue — and only
-        enters its WQ once every dependency has retired."""
+        enters its WQ once every dependency has retired.  ``wq`` may be an
+        index or a WQ name; ``priority`` steers to the nearest-priority WQ
+        when no explicit ``wq`` is given (see resolve_wq)."""
+        group, wq_idx = self.resolve_wq(group, wq, priority)
         after = list(after or ())
         failed = next((d for d in after
                        if d.is_done() and d.status in (Status.ERROR, Status.OVERFLOW)), None)
@@ -158,10 +225,10 @@ class StreamEngine:
             rec = CompletionRecord(desc_id=desc.desc_id, status=Status.PENDING,
                                    op=op_name(desc))
             self.records[desc.desc_id] = rec
-            self._deferred.append((desc, group, wq, producer, deps, rec))
+            self._deferred.append((desc, group, wq_idx, producer, deps, rec))
             self.kick()
             return Status.PENDING, rec
-        status = self.wq(group, wq).submit(desc, producer=producer)
+        status = self.wq(group, wq_idx).submit(desc, producer=producer)
         rec = CompletionRecord(desc_id=desc.desc_id, status=status, op=op_name(desc))
         if status != Status.RETRY:
             self.records[desc.desc_id] = rec
@@ -202,26 +269,37 @@ class StreamEngine:
                 slot.try_retire()
             free = [s for s in slots if not s.busy]
             while free:
-                desc = self._arbitrate(g)
-                if desc is None:
+                picked = self._arbitrate(g)
+                if picked is None:
                     break
+                desc, src_wq = picked
                 slot = free.pop()
-                self._launch(slot, desc)
+                self._launch(slot, desc, src_wq)
 
-    def _arbitrate(self, g: GroupConfig) -> Optional[Submittable]:
-        """Priority-weighted pick with round-robin anti-starvation."""
+    def _arbitrate(self, g: GroupConfig) -> Optional[Tuple[Submittable, WorkQueue]]:
+        """Priority-weighted deficit draining (paper Fig. 9 arbiter).
+
+        Each round every backlogged WQ earns credit equal to its priority
+        (floor 1); the richest WQ is drained and its credit resets.  A
+        priority-15 WQ therefore gets ~15 grants for each grant a
+        priority-1 WQ gets, and no backlogged WQ starves — its credit grows
+        every round until it wins.  Occupancy breaks ties so fuller WQs
+        drain first at equal priority."""
         nonempty = [w for w in g.wqs if len(w)]
         if not nonempty:
             return None
-        self._rr[g.name] += 1
-        if self._rr[g.name] % 8 == 0:  # starvation guard: service lowest priority
-            w = min(nonempty, key=lambda w: w.priority)
-        else:
-            w = max(nonempty, key=lambda w: (w.priority, w.occupancy))
-        return w.pop()
+        credits = self._credit[g.name]
+        for w in nonempty:
+            credits[w.name] += max(w.priority, 1)
+        w = max(nonempty, key=lambda w: (credits[w.name], w.occupancy))
+        credits[w.name] = 0.0
+        desc = w.pop()
+        if desc is None:
+            return None
+        return desc, w
 
     # ------------------------------------------------------------------ execution
-    def _launch(self, slot: _PESlot, desc: Submittable):
+    def _launch(self, slot: _PESlot, desc: Submittable, src_wq: Optional[WorkQueue] = None):
         # descriptors may be enqueued on a WQ directly (raw portal writes);
         # materialize their completion record lazily
         rec = self.records.setdefault(
@@ -230,70 +308,88 @@ class StreamEngine:
         if rec.op is None:
             rec.op = op_name(desc)
         rec.status = Status.RUNNING
+        dst_tier = "hbm"
+        enqcmd_s = 0.0
+        if src_wq is not None:
+            rec.wq = src_wq.name
+            rec.queue_delay_us = src_wq.last_queue_delay_us
+            rec.steering = src_wq.traffic_class
+            if src_wq.traffic_class == "to_cache":
+                dst_tier = "vmem"
+            if src_wq.mode == "shared":
+                enqcmd_s = self.model.enqcmd_overhead_s
         slot.record = rec
         slot.t0 = time.perf_counter()
         try:
             if isinstance(desc, BatchDescriptor):
-                outputs, nbytes, modeled = self._execute_batch(desc)
+                outputs, nbytes, modeled = self._execute_batch(desc, dst_tier=dst_tier)
             else:
-                outputs, nbytes, modeled = self._execute_one(desc)
+                outputs, nbytes, modeled = self._execute_one(desc, dst_tier=dst_tier)
             rec.result = outputs
             rec.bytes_processed = nbytes
-            rec.modeled_time_us = modeled * 1e6
+            rec.modeled_time_us = (modeled + enqcmd_s) * 1e6
             slot.outputs = outputs
         except Exception as e:  # noqa: BLE001
             rec.status = Status.ERROR
             rec.error = f"{type(e).__name__}: {e}"
             slot.record = None
 
-    def _execute_one(self, d: WorkDescriptor):
+    def _execute_one(self, d: WorkDescriptor, dst_tier: str = "hbm"):
         it = self.interpret
         m = self.model
         nbytes = d.nbytes
+        # per-descriptor TO_CACHE hints steer like a to_cache WQ (G3)
+        if d.cache_hint == CacheHint.TO_CACHE:
+            dst_tier = "vmem"
+
+        def t_op(nb, **kw):
+            kw.setdefault("dst_tier", dst_tier)
+            return m.op_time(nb, **kw)
+
         if d.op == OpType.MEMCPY:
             out = ops.memcpy(d.src, interpret=it)
-            t = m.op_time(nbytes)
+            t = t_op(nbytes)
         elif d.op == OpType.DUALCAST:
             out = ops.dualcast(d.src, interpret=it)
-            t = m.op_time(nbytes, read_factor=1.5)
+            t = t_op(nbytes, read_factor=1.5)
         elif d.op == OpType.FILL:
             out = ops.fill(jnp.asarray(d.pattern, jnp.uint32), d.n_words, interpret=it)
-            t = m.op_time(nbytes, read_factor=0.5)  # write-only
+            t = t_op(nbytes, read_factor=0.5)  # write-only
         elif d.op == OpType.COMPARE:
             out = ops.compare(d.src, d.src2, interpret=it)
-            t = m.op_time(nbytes)
+            t = t_op(nbytes)
         elif d.op == OpType.COMPARE_PATTERN:
             out = ops.compare_pattern(d.src, jnp.asarray(d.pattern, jnp.uint32), interpret=it)
-            t = m.op_time(nbytes, read_factor=0.5)
+            t = t_op(nbytes, read_factor=0.5)
         elif d.op == OpType.CRC32:
             out = ops.crc32(d.src, interpret=it)
-            t = m.op_time(nbytes, read_factor=0.5)
+            t = t_op(nbytes, read_factor=0.5)
         elif d.op == OpType.DELTA_CREATE:
             out = ops.delta_create(d.src, d.src2, cap=d.cap, interpret=it)
-            t = m.op_time(nbytes)
+            t = t_op(nbytes)
         elif d.op == OpType.DELTA_APPLY:
             out = ops.delta_apply(d.src, d.src_idx, d.src2, interpret=it)
-            t = m.op_time(nbytes)
+            t = t_op(nbytes)
         elif d.op == OpType.DIF_INSERT:
             out = dif_ops.dif_insert(d.src, interpret=it)
-            t = m.op_time(nbytes)
+            t = t_op(nbytes)
         elif d.op == OpType.DIF_CHECK:
             out = dif_ops.dif_check(d.src, interpret=it)
-            t = m.op_time(nbytes, read_factor=0.5)
+            t = t_op(nbytes, read_factor=0.5)
         elif d.op == OpType.DIF_STRIP:
             out = dif_ops.dif_strip(d.src)
-            t = m.op_time(nbytes)
+            t = t_op(nbytes)
         elif d.op == OpType.BATCH_COPY:
             out = ops.batch_copy(d.src, d.dst_pool, d.src_idx, d.dst_idx, interpret=it)
-            t = m.op_time(nbytes, batch_size=int(d.src_idx.shape[0]))
+            t = t_op(nbytes, batch_size=int(d.src_idx.shape[0]))
         elif d.op == OpType.CACHE_FLUSH:
             out = ()  # no TPU analogue (DESIGN.md); modeled only
-            t = m.op_time(nbytes, read_factor=0.5)
+            t = t_op(nbytes, read_factor=0.5)
         else:
             raise ValueError(f"unsupported op {d.op}")
         return out, nbytes, t
 
-    def _execute_batch(self, b: BatchDescriptor):
+    def _execute_batch(self, b: BatchDescriptor, dst_tier: str = "hbm"):
         descs = list(b.descriptors)
         # F2 fusion: homogeneous same-shape copies -> ONE batch_copy launch.
         # Fuse only when per-descriptor flags agree: a mixed cache-hint batch
@@ -307,17 +403,20 @@ class StreamEngine:
             and len({d.cache_hint for d in descs}) == 1
             and len({(d.src.shape, str(d.src.dtype)) for d in descs}) == 1
         ):
+            if descs[0].cache_hint == CacheHint.TO_CACHE:
+                dst_tier = "vmem"
             pool = jnp.stack([d.src for d in descs])
             idx = jnp.arange(len(descs), dtype=jnp.int32)
             out = ops.batch_copy(pool, jnp.zeros_like(pool), idx, idx, interpret=self.interpret)
             nbytes = b.nbytes
-            t = self.model.op_time(descs[0].nbytes, batch_size=len(descs))
+            t = self.model.op_time(descs[0].nbytes, batch_size=len(descs),
+                                   dst_tier=dst_tier)
             return list(out), nbytes, t
         outs = []
         nbytes = 0
         t = self.model.launch_overhead_s
         for d in descs:
-            o, nb, td = self._execute_one(d)
+            o, nb, td = self._execute_one(d, dst_tier=dst_tier)
             outs.append(o)
             nbytes += nb
             t += td - self.model.launch_overhead_s + self.model.submit_overhead_s

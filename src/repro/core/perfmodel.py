@@ -56,6 +56,10 @@ class EngineModel:
 
     launch_overhead_s: float = 4e-6  # one pallas_call dispatch (ENQCMD analogue)
     submit_overhead_s: float = 0.3e-6  # per-descriptor prep/submit on host
+    # extra non-posted round trip a SHARED WQ pays per submission (ENQCMD
+    # returns a carry flag; MOVDIR64B on a dedicated WQ is posted and pays
+    # nothing).  Paper §3.2: ~3x the posted submit cost at low thread counts.
+    enqcmd_overhead_s: float = 0.9e-6
     completion_poll_s: float = 0.2e-6  # completion-record check (UMWAIT analogue)
     pe_peak_bw: float = 819e9 / 2  # HBM copy roofline (rd+wr)
     pe_ramp_bytes: float = 32e3  # half-saturation transfer size per descriptor

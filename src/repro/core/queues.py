@@ -1,34 +1,102 @@
-"""Work queues (paper §3.2): dedicated (DWQ) vs shared (SWQ).
+"""Work queues (paper §3.2, §3.4): dedicated (DWQ) vs shared (SWQ) plus the
+WQCFG-style provisioning record.
 
 DWQ: single producer, MOVDIR64B-style posted submit — always accepted while
 capacity remains, owner-checked.
 SWQ: multi-producer, ENQCMD-style non-posted submit — returns RETRY when
 full; internal lock models the hardware's atomic enqueue (software needs no
-locks, per the paper).
+locks, per the paper).  The non-posted round trip costs extra submit time,
+which the engine charges into the modeled completion time.
+
+``WQConfig`` mirrors the DSA WQCFG register block the paper sweeps in
+Fig. 9: mode, size partition of the instance's 128 WQ entries, priority
+(1-15, higher drains first under the group arbiter), and a traffic class
+steering completions/destination writes toward LLC (DDIO, Fig. 12) or
+memory.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
-from typing import Deque, Optional, Union
+import time
+from typing import Deque, Optional, Tuple, Union
 
 from repro.core.descriptor import BatchDescriptor, Status, WorkDescriptor
 
 Submittable = Union[WorkDescriptor, BatchDescriptor]
 
+#: steering targets for a WQ's traffic class (paper Fig. 12 / G3): "to_cache"
+#: is the DDIO analogue (completion + destination lines allocated in LLC /
+#: VMEM tier), "to_memory" writes around the cache.
+TRAFFIC_CLASSES = ("to_memory", "to_cache")
+
+PRIORITY_MIN, PRIORITY_MAX = 1, 15
+
+
+@dataclasses.dataclass(frozen=True)
+class WQConfig:
+    """One WQ's provisioning record (the WQCFG analogue).
+
+    group      which engine group the WQ belongs to (WQ -> group -> PEs)
+    mode       "dedicated" (MOVDIR64B, owner-checked) | "shared" (ENQCMD)
+    size       entry partition; the paper's instances split 128 entries
+               across enabled WQs
+    priority   1-15, higher is drained preferentially by the group arbiter
+    traffic_class  completion/destination steering: "to_cache" | "to_memory"
+    owner      producer name enforced on dedicated WQs (None = any)
+    """
+
+    name: str
+    mode: str = "dedicated"
+    size: int = 32
+    priority: int = 1
+    traffic_class: str = "to_memory"
+    owner: Optional[str] = None
+    group: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("dedicated", "shared"):
+            raise ValueError(f"WQConfig.mode must be dedicated|shared, got {self.mode!r}")
+        if not PRIORITY_MIN <= self.priority <= PRIORITY_MAX:
+            raise ValueError(
+                f"WQConfig.priority must be in [{PRIORITY_MIN}, {PRIORITY_MAX}] "
+                f"(DSA WQCFG priority field), got {self.priority}"
+            )
+        if self.size < 1:
+            raise ValueError(f"WQConfig.size must be >= 1, got {self.size}")
+        if self.traffic_class not in TRAFFIC_CLASSES:
+            raise ValueError(
+                f"WQConfig.traffic_class must be one of {TRAFFIC_CLASSES}, "
+                f"got {self.traffic_class!r}"
+            )
+        if self.group < 0:
+            raise ValueError(f"WQConfig.group must be >= 0, got {self.group}")
+
 
 class WorkQueue:
     def __init__(self, name: str, mode: str = "dedicated", size: int = 32,
-                 priority: int = 0, owner: Optional[str] = None):
+                 priority: int = 0, owner: Optional[str] = None,
+                 traffic_class: str = "to_memory"):
         assert mode in ("dedicated", "shared")
         self.name = name
         self.mode = mode
         self.size = size
         self.priority = priority
         self.owner = owner
-        self._q: Deque[Submittable] = collections.deque()
+        self.traffic_class = traffic_class
+        self._q: Deque[Tuple[Submittable, float]] = collections.deque()
         self._lock = threading.Lock()
-        self.stats = {"submitted": 0, "retried": 0, "dispatched": 0}
+        self.stats = {"submitted": 0, "retried": 0, "dispatched": 0,
+                      "queue_delay_us": 0.0}
+        # queueing delay of the most recent pop(); the engine reads this to
+        # stamp the descriptor's CompletionRecord
+        self.last_queue_delay_us: float = 0.0
+
+    @classmethod
+    def from_config(cls, cfg: WQConfig) -> "WorkQueue":
+        return cls(cfg.name, mode=cfg.mode, size=cfg.size, priority=cfg.priority,
+                   owner=cfg.owner, traffic_class=cfg.traffic_class)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -37,7 +105,12 @@ class WorkQueue:
     def occupancy(self) -> float:
         return len(self._q) / self.size
 
+    @property
+    def mean_queue_delay_us(self) -> float:
+        return self.stats["queue_delay_us"] / max(self.stats["dispatched"], 1)
+
     def submit(self, desc: Submittable, producer: Optional[str] = None) -> Status:
+        now = time.perf_counter()
         if self.mode == "dedicated":
             if self.owner is not None and producer is not None and producer != self.owner:
                 raise PermissionError(
@@ -47,7 +120,7 @@ class WorkQueue:
                 # a full DWQ is a programming error in DSA (posted write drops)
                 self.stats["retried"] += 1
                 return Status.RETRY
-            self._q.append(desc)
+            self._q.append((desc, now))
             self.stats["submitted"] += 1
             return Status.PENDING
         # shared: atomic non-posted enqueue with RETRY status
@@ -55,13 +128,17 @@ class WorkQueue:
             if len(self._q) >= self.size:
                 self.stats["retried"] += 1
                 return Status.RETRY
-            self._q.append(desc)
+            self._q.append((desc, now))
             self.stats["submitted"] += 1
             return Status.PENDING
 
     def pop(self) -> Optional[Submittable]:
         with self._lock:
             if self._q:
+                desc, t_enq = self._q.popleft()
+                delay_us = (time.perf_counter() - t_enq) * 1e6
+                self.last_queue_delay_us = delay_us
                 self.stats["dispatched"] += 1
-                return self._q.popleft()
+                self.stats["queue_delay_us"] += delay_us
+                return desc
             return None

@@ -44,6 +44,13 @@ class Telemetry:
             self.engines = list(engines or [])
         self.ops = {e.name: defaultdict(OpCounter) for e in self.engines}
         self.wq_samples = {e.name: [] for e in self.engines}
+        # per-WQ rollups: occupancy samples and completion latency, keyed by
+        # WQ name within each engine (Fig. 9 queueing-delay attribution)
+        self.per_wq_samples = {
+            e.name: {w.name: [] for g in e.config.groups for w in g.wqs}
+            for e in self.engines
+        }
+        self.per_wq_ops = {e.name: defaultdict(OpCounter) for e in self.engines}
         self._seen: set = set()
         self.t0 = time.perf_counter()
 
@@ -51,6 +58,9 @@ class Telemetry:
         for e in self.engines:
             occ = [w.occupancy for g in e.config.groups for w in g.wqs]
             self.wq_samples[e.name].append(sum(occ) / max(len(occ), 1))
+            for g in e.config.groups:
+                for w in g.wqs:
+                    self.per_wq_samples[e.name][w.name].append(w.occupancy)
             for desc_id, rec in list(e.records.items()):
                 if desc_id in self._seen or not rec.is_done():
                     continue
@@ -62,6 +72,12 @@ class Telemetry:
                 c.bytes += rec.bytes_processed
                 c.modeled_us += rec.modeled_time_us
                 c.wall_us += rec.wall_time_us
+                if rec.wq is not None:
+                    wc = self.per_wq_ops[e.name][rec.wq]
+                    wc.count += 1
+                    wc.bytes += rec.bytes_processed
+                    wc.modeled_us += rec.modeled_time_us
+                    wc.wall_us += rec.wall_time_us
 
     def snapshot(self) -> dict:
         self.sample()
@@ -70,10 +86,30 @@ class Telemetry:
             retries = sum(w.stats["retried"] for g in e.config.groups for w in g.wqs)
             submitted = sum(w.stats["submitted"] for g in e.config.groups for w in g.wqs)
             samples = self.wq_samples[e.name]
+            wq_rollup = {}
+            for g in e.config.groups:
+                for w in g.wqs:
+                    occ = self.per_wq_samples[e.name][w.name]
+                    comp = self.per_wq_ops[e.name].get(w.name, OpCounter())
+                    wq_rollup[w.name] = {
+                        "mode": w.mode,
+                        "priority": w.priority,
+                        "traffic_class": w.traffic_class,
+                        "size": w.size,
+                        "submitted": w.stats["submitted"],
+                        "retried": w.stats["retried"],
+                        "dispatched": w.stats["dispatched"],
+                        "mean_occupancy": sum(occ) / max(len(occ), 1),
+                        "mean_queue_delay_us": w.mean_queue_delay_us,
+                        "completed": comp.count,
+                        "bytes": comp.bytes,
+                        "modeled_us": comp.modeled_us,
+                    }
             out["engines"][e.name] = {
                 "submitted": submitted,
                 "retries": retries,
                 "mean_wq_occupancy": sum(samples) / max(len(samples), 1),
+                "wqs": wq_rollup,
                 "ops": {
                     k: dataclasses.asdict(v) for k, v in sorted(self.ops[e.name].items())
                 },
@@ -97,6 +133,13 @@ class Telemetry:
                 f"  {name}: submitted={e['submitted']} retries={e['retries']} "
                 f"wq_occ={e['mean_wq_occupancy']:.2f}"
             )
+            for wname, w in e["wqs"].items():
+                lines.append(
+                    f"    wq {wname:<10s} [{w['mode'][:4]} pri={w['priority']:<2d} "
+                    f"{w['traffic_class']}]: disp={w['dispatched']:<5d} "
+                    f"retry={w['retried']:<4d} occ={w['mean_occupancy']:.2f} "
+                    f"qdelay={w['mean_queue_delay_us']:.1f}us"
+                )
             for key, c in e["ops"].items():
                 gbps = c["bytes"] / max(c["modeled_us"] * 1e-6, 1e-12) / 1e9
                 lines.append(

@@ -26,8 +26,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Device, OpType, Status, WorkDescriptor
+from repro.core import Device, OpType, Status, WorkDescriptor, WQConfig
 from repro.core.descriptor import BatchDescriptor
+
+#: default WQ provisioning for a serving device (paper Fig. 9 + G6): a small
+#: high-priority dedicated WQ for latency-critical admission copies (steered
+#: to cache so the prefill that consumes them reads warm lines, Fig. 12) and
+#: a large low-priority shared WQ for bulk background traffic.
+SERVING_WQ_CONFIGS = (
+    WQConfig("latency", mode="dedicated", size=16, priority=12,
+             traffic_class="to_cache"),
+    WQConfig("bulk", mode="shared", size=48, priority=2,
+             traffic_class="to_memory"),
+)
 
 
 @dataclasses.dataclass
@@ -82,8 +93,11 @@ class VhostStyleServer:
         self.params = params
         self.slots = slots
         self.max_cache_len = max_cache_len
-        self.device = device or Device()
+        self.device = device or Device(wq_configs=list(SERVING_WQ_CONFIGS))
         self.burst = burst
+        # admission copies gate time-to-first-token: steer them to the
+        # high-priority WQ when the device has one, else the default WQ
+        self._copy_wq = "latency" if self.device.has_wq("latency") else None
         self.reorder = ReorderArray()
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
@@ -131,7 +145,8 @@ class VhostStyleServer:
                 WorkDescriptor(op=OpType.MEMCPY, src=jnp.asarray(np.ascontiguousarray(c)))
                 for c in chunks[: self.burst]
             ]
-            fut = self.device.batch_async(descs, producer=f"slot{slot}")
+            fut = self.device.batch_async(descs, producer=f"slot{slot}",
+                                          wq=self._copy_wq)
             if isinstance(fut, tuple):  # legacy Stream shim: (engine, record)
                 fut = fut[1]
             self.reorder.push(self._tag, fut, (slot, req))

@@ -1,0 +1,64 @@
+"""Docs checker (CI): every ```python code block in README.md and docs/*.md
+must execute cleanly against the current sources, so the documentation can
+never drift from the API.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Each block runs in its own namespace; a failure prints the offending file,
+block index, and traceback, and exits non-zero.  Non-executable snippets
+should use a different fence language (```bash, ```text, ...).
+"""
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# match ```python / ```py fences, tolerating info strings and CRLF endings
+BLOCK_RE = re.compile(r"```py(?:thon)?[^\n]*\r?\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(path: Path) -> int:
+    failures = 0
+    text = path.read_text()
+    matches = list(BLOCK_RE.finditer(text))
+    if not matches:
+        print(f"note {path.relative_to(ROOT)}: no python blocks found")
+    for i, m in enumerate(matches, 1):
+        code = m.group(1).replace("\r\n", "\n")
+        line = text[: m.start()].count("\n") + 2  # first line inside the fence
+        try:
+            exec(compile(code, f"{path.name}:block{i}", "exec"), {"__name__": "__docs__"})
+        except Exception:
+            failures += 1
+            print(f"FAIL {path.relative_to(ROOT)} block {i} (line {line}):",
+                  file=sys.stderr)
+            traceback.print_exc()
+        else:
+            print(f"ok   {path.relative_to(ROOT)} block {i} (line {line})")
+    return failures
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("no documentation files found", file=sys.stderr)
+        return 1
+    failures = sum(check_file(f) for f in files)
+    if failures:
+        print(f"{failures} documentation code block(s) failed", file=sys.stderr)
+        return 1
+    print(f"all python blocks in {len(files)} file(s) executed cleanly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
