@@ -1,27 +1,70 @@
-"""Paper Fig. 11: fraction of CPU cycles spent in UMWAIT (host free) while
-offloading, vs transfer size and batch size.
+"""Paper Fig. 11: fraction of CPU cycles the host spends parked (UMWAIT /
+interrupt — free for other work) vs busy (spin/PAUSE polling) while the
+engine streams, vs transfer size and in-flight depth.
 
-Adaptation: host-free fraction = (t_total - t_submit_prep) / t_total — the
-cycles the host can spend on other work while the engine streams.  Claims
-validated: fraction -> ~1 for >=4KB transfers; batching pushes even small
-transfers into the mostly-waiting regime.
+Unlike the closed-form formula this module used to print, every row now
+drives the REAL engine through the completion subsystem and reports the
+host-free fraction from ``Telemetry`` measurements: a device is built with
+the wait policy under test, ``depth`` copies are submitted, and ONE
+``wait_all`` retires them while the policy accounts host-busy (pump/poll
+wall time + modeled wake/IRQ costs) vs host-free (parked-in-block wall
+time) cycles.
+
+Claims validated (paper Fig. 11 + "choose your wait scheme"):
+  * spin/pause never free the host (host_free_frac = 0);
+  * umwait/interrupt free-cycle fraction grows with transfer size — large
+    transfers park the host for most of the wait;
+  * in-flight depth (the batching analogue) pushes even small transfers
+    toward the mostly-parked regime, and interrupt coalescing retires many
+    completions per IRQ (irqs << completions).
 """
 from __future__ import annotations
 
+import time
 from typing import List
 
-from benchmarks.common import MODEL, Row
+from benchmarks.common import Row, words_for_bytes
+from repro.core import make_device
+from repro.core.telemetry import Telemetry
 
-SIZES = [256, 1024, 4096, 65536, 1 << 20]
-BATCHES = [1, 8, 128]
+SIZES = [4096, 65536, 1 << 20]
+DEPTHS = [1, 8]
+POLICIES = ["spin", "pause", "umwait", "interrupt"]
+
+QUICK_SIZES = [65536]
+QUICK_DEPTHS = [8]
+QUICK_POLICIES = ["spin", "umwait", "interrupt"]
 
 
-def rows() -> List[Row]:
+def _measure(policy: str, size: int, depth: int) -> Row:
+    device = make_device(wait_policy=policy)
+    tel = Telemetry(device)
+    w = words_for_bytes(size)
+    t0 = time.perf_counter()
+    futs = [device.memcpy_async(w) for _ in range(depth)]
+    device.wait_all(futs)
+    wall = time.perf_counter() - t0
+    ws = tel.snapshot()["wait"][policy]
+    return (
+        f"fig11/ts{size}B/d{depth}/{policy}",
+        wall / depth * 1e6,
+        f"host_free_frac={ws['host_free_frac']:.3f} "
+        f"polls={ws['polls']} wakes={ws['wakes']} irqs={ws['irqs']} "
+        f"completions={ws['completions']}",
+    )
+
+
+def rows(quick: bool = False) -> List[Row]:
+    sizes = QUICK_SIZES if quick else SIZES
+    depths = QUICK_DEPTHS if quick else DEPTHS
+    policies = QUICK_POLICIES if quick else POLICIES
+    # warm the jit caches per shape so compile time doesn't pollute the
+    # first policy's busy/free split
+    for size in sizes:
+        make_device().memcpy_async(words_for_bytes(size)).wait()
     out: List[Row] = []
-    for size in SIZES:
-        for bs in BATCHES:
-            total = MODEL.op_time(size, batch_size=bs, n_pe=4)
-            busy = MODEL.submit_overhead_s * bs + MODEL.completion_poll_s
-            frac = max(0.0, 1.0 - busy / total)
-            out.append((f"fig11/ts{size}B/bs{bs}", total * 1e6, f"umwait_frac={frac:.3f}"))
+    for size in sizes:
+        for depth in depths:
+            for policy in policies:
+                out.append(_measure(policy, size, depth))
     return out

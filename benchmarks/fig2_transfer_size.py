@@ -21,7 +21,7 @@ SIZES = [256, 1024, 4096, 16384, 65536, 262144, 1 << 20, 4 << 20]
 OPS = ["memcpy", "fill", "compare", "crc32", "dualcast"]
 
 
-def rows() -> List[Row]:
+def rows(quick: bool = False) -> List[Row]:
     out: List[Row] = []
     for size in SIZES:
         for sync, depth in (("sync", 1), ("async", 32)):
@@ -38,8 +38,8 @@ def rows() -> List[Row]:
         x = MODEL.crossover_bytes(async_depth=depth, n_pe=4)
         out.append((f"fig2/crossover/{mode}", 0.0, f"crossover={x / 1024:.2f}KB"))
     # measured sanity at two sizes (interpret mode; absolute numbers are
-    # host-CPU, shapes only)
-    for size in (4096, 262144):
+    # host-CPU, shapes only); one size in quick mode (CI bench-smoke)
+    for size in (4096,) if quick else (4096, 262144):
         w = words_for_bytes(size)
         t = time_call(lambda w=w: ops.memcpy(w))
         out.append((f"fig2/measured/memcpy/{size}B", t * 1e6, "interpret"))

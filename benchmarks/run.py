@@ -1,15 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig16]
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig16] \
+        [--quick] [--json BENCH.json]
 
 Prints ``name,us_per_call,derived`` CSV rows and writes
-results/bench/bench.json.  Each module's docstring names the paper claims it
-validates; EXPERIMENTS.md §Paper-validation summarizes the outcomes.
+results/bench/bench.json (``--json PATH`` writes the same machine-readable
+rows to PATH — what the CI bench-smoke job archives).  ``--quick`` asks
+modules that support it (``rows(quick=True)``) for a reduced sweep.  Any
+module that raises fails the run (non-zero exit), so benchmark drift fails
+the build instead of scrolling by.  Each module's docstring names the paper
+claims it validates; EXPERIMENTS.md §Paper-validation summarizes the
+outcomes.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import sys
 import time
@@ -33,14 +40,19 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps for modules whose rows() takes quick=")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable rows to PATH")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
     all_rows = []
+    errors = 0
     print("name,us_per_call,derived")
     for mod_name in MODULES:
         if only and not any(mod_name.startswith(o) for o in only):
@@ -48,9 +60,13 @@ def main() -> None:
         t0 = time.time()
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         try:
-            rows = mod.rows()
-        except Exception as e:  # noqa: BLE001 — report and continue
+            kwargs = {}
+            if args.quick and "quick" in inspect.signature(mod.rows).parameters:
+                kwargs["quick"] = True
+            rows = mod.rows(**kwargs)
+        except Exception as e:  # noqa: BLE001 — report, fail the run at exit
             print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            errors += 1
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.2f},{derived}", flush=True)
@@ -60,7 +76,12 @@ def main() -> None:
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / "bench.json").write_text(json.dumps(all_rows, indent=1))
+    if args.json:
+        Path(args.json).write_text(json.dumps(all_rows, indent=1))
+    if errors:
+        print(f"# {errors} benchmark module(s) failed", file=sys.stderr)
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

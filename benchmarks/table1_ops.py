@@ -33,6 +33,7 @@ def rows() -> List[Row]:
         ("delta_apply", lambda: ops.delta_apply(w, off, data, use_kernel=False), 1.0),
         ("dif_insert", lambda: dif.dif_insert(w), 1.0),
         ("dif_check", lambda: dif.dif_check(dif.dif_insert(w)), 0.5),
+        ("dif_strip", lambda: dif.dif_strip(dif.dif_insert(w)), 1.0),
         ("batch_copy_x16", lambda: ops.batch_copy(
             pool, jnp.zeros_like(pool), jnp.arange(16, dtype=jnp.int32),
             jnp.arange(16, dtype=jnp.int32)), 1.0),

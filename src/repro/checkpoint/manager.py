@@ -79,19 +79,13 @@ class CheckpointConfig:
 
 
 class CheckpointManager:
-    def __init__(self, config: CheckpointConfig, device=None, *, stream=None):
+    def __init__(self, config: CheckpointConfig, device=None):
         self.cfg = config
         self.dir = Path(config.directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.replica_dir = Path(str(self.dir) + "-replica") if config.replicas > 1 else None
         if self.replica_dir:
             self.replica_dir.mkdir(parents=True, exist_ok=True)
-        if device is None and stream is not None:  # deprecated alias
-            import warnings
-
-            warnings.warn("CheckpointManager(stream=...) is deprecated; pass device=",
-                          DeprecationWarning, stacklevel=2)
-            device = stream
         self.device = device
         self._thread: Optional[threading.Thread] = None
         self._save_count = 0
@@ -101,18 +95,26 @@ class CheckpointManager:
                       "bytes_written": 0, "bytes_saved_by_delta": 0}
 
     # ------------------------------------------------------------------ crc
-    def _crc(self, data: bytes) -> int:
+    def _crc_submit(self, data: bytes):
+        """CRC of ``data``: an int for host zlib, or a Future when the CRC
+        runs as an engine descriptor (crc_impl="kernel" with a device) —
+        the save path submits one per leaf and gathers them with ONE
+        ``device.wait_all`` instead of blocking leaf by leaf."""
         if self.cfg.crc_impl == "kernel":
             pad = (-len(data)) % 4
             words = jax.numpy.asarray(np.frombuffer(data + b"\0" * pad, dtype="<u4"))
             if self.device is not None:
                 # CRC as an engine descriptor: shows up in telemetry and
                 # shares the instance pool with other checkpoint traffic
-                return self.device.crc32(words)
+                return self.device.crc32_async(words, producer="checkpoint")
             from repro.kernels import ops as kops
 
             return int(kops.crc32(words))
         return zlib.crc32(data) & 0xFFFFFFFF
+
+    def _crc(self, data: bytes) -> int:
+        c = self._crc_submit(data)
+        return int(c.result()) if hasattr(c, "result") else c
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, *, force_full: bool = False):
@@ -148,6 +150,18 @@ class CheckpointManager:
             "leaves": {},
         }
         new_base: Dict[str, np.ndarray] = {}
+        # kernel CRCs are engine descriptors: submit per leaf, gather ONCE
+        # through the completion subsystem (device.wait_all) at the end —
+        # all leaf CRCs stream concurrently instead of blocking per leaf
+        pending: List[Tuple[Dict[str, Any], str, Any]] = []
+
+        def put_crc(entry: Dict[str, Any], field: str, data: bytes):
+            c = self._crc_submit(data)
+            if hasattr(c, "result"):
+                pending.append((entry, field, c))
+            else:
+                entry[field] = c
+
         for key, arr in leaves:
             fn = key.replace("/", "__")
             words = _u32_view(arr)
@@ -160,7 +174,7 @@ class CheckpointManager:
                 data = arr.tobytes()
                 (tmp / f"{fn}.bin").write_bytes(data)
                 entry["mode"] = "full"
-                entry["crc"] = self._crc(data)
+                put_crc(entry, "crc", data)
                 self.stats["full_leaves"] += 1
                 self.stats["bytes_written"] += len(data)
                 new_base[key] = words
@@ -170,14 +184,14 @@ class CheckpointManager:
                 diff = np.nonzero(words != base)[0]
                 if len(diff) == 0:
                     entry["mode"] = "same"
-                    entry["crc"] = self._crc(arr.tobytes())
+                    put_crc(entry, "crc", arr.tobytes())
                     self.stats["bytes_saved_by_delta"] += arr.nbytes
                 elif len(diff) > cap:
                     # DSA delta-overflow status -> fall back to full copy
                     data = arr.tobytes()
                     (tmp / f"{fn}.bin").write_bytes(data)
                     entry["mode"] = "full"
-                    entry["crc"] = self._crc(data)
+                    put_crc(entry, "crc", data)
                     self.stats["delta_overflows"] += 1
                     self.stats["bytes_written"] += len(data)
                 else:
@@ -187,12 +201,16 @@ class CheckpointManager:
                     np.savez(tmp / f"{fn}.delta.npz", offsets=offs, data=vals)
                     entry["mode"] = "delta"
                     entry["count"] = int(len(diff))
-                    entry["crc"] = self._crc(arr.tobytes())  # crc of FINAL contents
-                    entry["payload_crc"] = self._crc(payload)
+                    put_crc(entry, "crc", arr.tobytes())  # crc of FINAL contents
+                    put_crc(entry, "payload_crc", payload)
                     self.stats["delta_leaves"] += 1
                     self.stats["bytes_written"] += len(payload)
                     self.stats["bytes_saved_by_delta"] += arr.nbytes - len(payload)
             manifest["leaves"][key] = entry
+        if pending:
+            self.device.wait_all([f for _, _, f in pending])
+            for entry, field, fut in pending:
+                entry[field] = int(fut.result())
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if final.exists():
             shutil.rmtree(final)

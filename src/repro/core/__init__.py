@@ -2,9 +2,25 @@
 descriptor-programmed streaming engine (see DESIGN.md §2-3).
 
 Entry point: ``Device`` / ``make_device`` — policy-driven multi-instance
-submission returning ``Future`` objects.  ``Stream`` / ``make_stream`` are
-deprecated one-release shims over Device."""
-from repro.core.api import Stream, dto, dto_enabled, make_stream
+submission returning ``Future`` objects; completion waiting is pluggable
+(``WaitPolicy``: spin / pause / umwait / interrupt) with set-oriented
+``wait_any`` / ``wait_all`` / ``as_completed`` on the device.
+
+The deprecated ``Stream`` / ``make_stream`` shims were removed; see
+docs/api.md ("Migration: Stream -> Device")."""
+from repro.core.api import dto, dto_enabled
+from repro.core.completion import (
+    WAIT_POLICIES,
+    CompletionSet,
+    InterruptWait,
+    PauseWait,
+    SpinWait,
+    UmwaitWait,
+    WaitPolicy,
+    WaitStats,
+    WaitTimeout,
+    get_wait_policy,
+)
 from repro.core.descriptor import (
     BatchDescriptor,
     CacheHint,
@@ -33,30 +49,49 @@ __all__ = [
     "BatchDescriptor",
     "CacheHint",
     "CompletionRecord",
+    "CompletionSet",
     "Device",
     "DeviceConfig",
     "DEFAULT_MODEL",
     "EngineModel",
     "Future",
     "GroupConfig",
+    "InterruptWait",
     "LeastLoadedPolicy",
     "OpType",
+    "PauseWait",
     "Promise",
     "QueueFull",
     "RoundRobinPolicy",
+    "SpinWait",
     "Status",
     "StickyPolicy",
-    "Stream",
     "StreamEngine",
     "SubmitPolicy",
     "TIERS",
     "TRAFFIC_CLASSES",
+    "UmwaitWait",
+    "WAIT_POLICIES",
+    "WaitPolicy",
+    "WaitStats",
+    "WaitTimeout",
     "WorkDescriptor",
     "WorkQueue",
     "WQConfig",
     "dto",
     "dto_enabled",
     "get_policy",
+    "get_wait_policy",
     "make_device",
-    "make_stream",
 ]
+
+
+def __getattr__(name: str):
+    if name in ("Stream", "make_stream"):
+        raise AttributeError(
+            f"repro.core.{name} was removed: the deprecated Stream shim API "
+            "is gone. Use repro.core.make_device / Device — submissions "
+            "return Future objects. Migration guide: docs/api.md, "
+            "'Migration: Stream -> Device'."
+        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,74 +1,43 @@
-"""High-level engine API (DML analogue) and transparent offload (DTO analogue).
+"""Transparent offload (DTO analogue).
 
 The paper ships two software layers above raw descriptors:
   * DML — explicit C/C++ API with async offload and load balancing;
   * DTO — LD_PRELOAD interception of memcpy/memset/memcmp.
 
-The DML-style facade now lives in core/device.py: ``Device`` owns N engine
+The DML-style facade lives in core/device.py: ``Device`` owns N engine
 instances behind a pluggable SubmitPolicy and returns ``Future`` objects
-from every submit.  This module keeps:
+from every submit; completion waiting is core/completion.py.  This module
+keeps ``dto`` — the drop-in layer: jnp-compatible copy/fill/compare
+functions that route through the active Device when one is installed, else
+fall back to plain jnp.
 
-  * ``Stream`` / ``make_stream`` — DEPRECATED one-release shims over Device
-    that preserve the old (engine, record) tuple handles; new code should
-    use ``Device`` / ``make_device`` and Futures.
-  * ``dto`` — the drop-in layer: jnp-compatible copy/fill/compare functions
-    that route through the active Device when one is installed, else fall
-    back to plain jnp.
+The deprecated ``Stream`` / ``make_stream`` shims were REMOVED (they
+lasted the promised one release): port to ``make_device`` and Futures —
+see docs/api.md, "Migration: Stream -> Device".
 """
 from __future__ import annotations
 
 import contextlib
 import threading
-import warnings
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.descriptor import CompletionRecord
-from repro.core.device import Device, Future, QueueFull, make_device
-from repro.core.engine import DeviceConfig, StreamEngine
+from repro.core.device import Device, make_device
+
+_REMOVED_SHIMS = ("Stream", "make_stream")
 
 
-class Stream(Device):
-    """DEPRECATED: use Device.  Thin compatibility shim preserving the old
-    raw-tuple handle API: ``submit`` (and the ``*_async`` helpers, which
-    route through it) return ``(engine, record)`` instead of a Future, and
-    ``wait``/``poll`` accept those tuples.  Removed after one release."""
-
-    def __init__(self, engines: Optional[Sequence[StreamEngine]] = None):
-        warnings.warn(
-            "Stream is deprecated; use repro.core.Device (make_device) — "
-            "submissions now return Future objects",
-            DeprecationWarning, stacklevel=2,
+def __getattr__(name: str):
+    if name in _REMOVED_SHIMS:
+        raise AttributeError(
+            f"repro.core.api.{name} was removed: the deprecated Stream shim "
+            "API is gone. Use repro.core.make_device / Device — submissions "
+            "return Future objects. Migration guide: docs/api.md, "
+            "'Migration: Stream -> Device'."
         )
-        super().__init__(engines if engines else None, policy="round_robin")
-
-    def submit(self, desc, group: int = 0, wq: int = 0,
-               **kw) -> Tuple[StreamEngine, CompletionRecord]:
-        # legacy ENQCMD semantics: the old Stream spun on RETRY until the
-        # submission landed and never failed, so the shim must not let
-        # Device's bounded backoff surface QueueFull to old callers
-        while True:
-            try:
-                fut = super().submit(desc, group=group, wq=wq, **kw)
-            except QueueFull:
-                continue
-            return fut.engine, fut.record
-
-
-def make_stream(n_instances: int = 1, **cfg_kw) -> Stream:
-    """DEPRECATED: use make_device."""
-    warnings.warn(
-        "make_stream is deprecated; use repro.core.make_device",
-        DeprecationWarning, stacklevel=2,
-    )
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return Stream(
-            [StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
-             for i in range(n_instances)]
-        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # --------------------------------------------------------------------------- DTO

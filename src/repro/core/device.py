@@ -15,24 +15,29 @@ This module makes each of those a first-class API object:
                 a software fence for gating submissions on host events.
   SubmitPolicy  pluggable instance selection: round_robin, least_loaded
                 (by WQ occupancy), sticky (per-producer affinity).
-  Device        the top-level entry point replacing ``Stream``: owns N
-                StreamEngine instances, applies the policy per submission,
-                and converts ENQCMD RETRY into bounded exponential backoff
-                ending in ``QueueFull`` instead of an unbounded spin.
-
-``Stream`` (core/api.py) remains as a thin deprecated shim over Device for
-one release.
+  WaitPolicy    pluggable completion waiting (core/completion.py): spin /
+                pause / umwait / interrupt, selectable per device and per
+                wait; ``wait_any``/``wait_all``/``as_completed`` drive one
+                policy loop over a whole set of futures, fed by engine
+                completion notifications instead of per-Future pumping.
+  Device        the top-level entry point: owns N StreamEngine instances,
+                applies the policy per submission, and converts ENQCMD
+                RETRY into bounded exponential backoff ending in
+                ``QueueFull`` instead of an unbounded spin.
 """
 from __future__ import annotations
 
 import threading
 import time
+import weakref
 import zlib
-from collections import Counter
-from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+from collections import Counter, defaultdict, deque
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Union
 
 import jax
 
+from repro.core import completion as _completion
+from repro.core.completion import WaitPolicy, WaitStats, get_wait_policy
 from repro.core.descriptor import (
     BatchDescriptor,
     CompletionRecord,
@@ -72,6 +77,7 @@ class Future:
         self.record = record
         self._callbacks: List[Callable[["Future"], None]] = []
         self._fired = False
+        self._cb_lock = threading.Lock()
 
     # -- state ---------------------------------------------------------------
     @property
@@ -124,34 +130,28 @@ class Future:
             return True
         return False
 
-    def wait(self) -> Any:
+    def wait(self, policy: Union[str, WaitPolicy, None] = None) -> Any:
         """Block until the record resolves; returns the raw result payload
-        (None when the descriptor errored — use result() to raise instead)."""
-        if self.engine is None:
-            self._pump()
-            if not self.done():
-                raise RuntimeError("unresolved promise: no engine will complete it")
-        else:
-            delay = 50e-6
-            while not self.done():
+        (None when the descriptor errored — use result() to raise instead).
+        ``policy`` overrides the device's wait policy for this wait (spin /
+        pause / umwait / interrupt — see core/completion.py)."""
+        if not self.done():
+            if self.device is not None:
+                # one-element set wait: same machinery as wait_any/wait_all,
+                # so host-busy/host-free accounting covers every wait
+                self.device.wait_all([self], policy=policy)
+            elif self.engine is None:
                 self._pump()
-                if self.record.status == Status.RUNNING:
-                    if self.device is not None:
-                        with self.device._engine_lock:
-                            self.engine.wait(self.record)
-                    else:
-                        self.engine.wait(self.record)
-                elif not self.done():
-                    # deferred on a fence resolved elsewhere (another thread
-                    # or a Promise): back off instead of burning the core
-                    time.sleep(delay)
-                    delay = min(delay * 2, 1e-3)
+                if not self.done():
+                    raise RuntimeError("unresolved promise: no engine will complete it")
+            else:
+                self.engine.wait(self.record)
         self._fire_callbacks()
         return self.record.result
 
-    def result(self) -> Any:
+    def result(self, policy: Union[str, WaitPolicy, None] = None) -> Any:
         """wait(), but a failed descriptor raises instead of returning None."""
-        value = self.wait()
+        value = self.wait(policy=policy)
         if self.record.status == Status.ERROR:
             raise RuntimeError(self.record.error or "descriptor failed")
         return value
@@ -163,21 +163,26 @@ class Future:
 
     def add_done_callback(self, fn: Callable[["Future"], None]):
         """Register ``fn(future)`` to run when completion is observed
-        (poll/wait/result).  Callbacks fire once, in registration order; a
-        callback added after completion runs immediately."""
-        if self._fired:
-            fn(self)
-        else:
-            self._callbacks.append(fn)
+        (poll/wait/result or an engine completion notification).  Callbacks
+        fire exactly once — even with concurrent waiters — in registration
+        order; a callback added after completion runs immediately."""
+        with self._cb_lock:
+            if not self._fired:
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     # alias matching the issue's spelling
     done_callback = add_done_callback
 
     def _fire_callbacks(self):
-        if self._fired or not self.done():
+        if not self.done():
             return
-        self._fired = True
-        callbacks, self._callbacks = self._callbacks, []
+        with self._cb_lock:
+            if self._fired:
+                return
+            self._fired = True
+            callbacks, self._callbacks = self._callbacks, []
         for fn in callbacks:
             fn(self)
 
@@ -200,13 +205,15 @@ class ChainedFuture(Future):
         if self.parent.record.status == Status.ERROR:
             self.record.status = Status.ERROR
             self.record.error = self.parent.record.error or "parent failed"
-            return
-        try:
-            self.record.result = self.fn(self.parent.record.result)
-            self.record.status = Status.SUCCESS
-        except Exception as e:  # noqa: BLE001
-            self.record.status = Status.ERROR
-            self.record.error = f"{type(e).__name__}: {e}"
+        else:
+            try:
+                self.record.result = self.fn(self.parent.record.result)
+                self.record.status = Status.SUCCESS
+            except Exception as e:  # noqa: BLE001
+                self.record.status = Status.ERROR
+                self.record.error = f"{type(e).__name__}: {e}"
+        if self.device is not None:
+            self.device._on_future_done(self)  # deliver to completion sets
 
     def done(self) -> bool:
         if not self.record.is_done() and self.parent.done():
@@ -221,9 +228,9 @@ class ChainedFuture(Future):
             return True
         return False
 
-    def wait(self) -> Any:
+    def wait(self, policy: Union[str, WaitPolicy, None] = None) -> Any:
         if not self.record.is_done():
-            self.parent.wait()
+            self.parent.wait(policy=policy)
             self._resolve()
         self._fire_callbacks()
         return self.record.result
@@ -240,16 +247,31 @@ class Promise(Future):
     def set_result(self, value: Any = None):
         self.record.result = value
         self.record.status = Status.SUCCESS
-        self._fire_callbacks()
         if self.device is not None:
+            self.device._on_future_done(self)  # callbacks + completion sets
             self.device.kick()  # release anything fenced on this promise
+        else:
+            self._fire_callbacks()
 
     def set_error(self, error: Union[str, BaseException]):
         self.record.error = str(error)
         self.record.status = Status.ERROR
-        self._fire_callbacks()
         if self.device is not None:
+            self.device._on_future_done(self)
             self.device.kick()
+        else:
+            self._fire_callbacks()
+
+    def wait(self, policy: Union[str, WaitPolicy, None] = None) -> Any:
+        """A promise is host-completed: an unresolved one can never be
+        waited to completion by pumping engines, so fail fast instead of
+        parking forever."""
+        if not self.done():
+            self._pump()
+            if not self.done():
+                raise RuntimeError("unresolved promise: no engine will complete it")
+        self._fire_callbacks()
+        return self.record.result
 
 
 def op_str(f: Future) -> str:
@@ -348,6 +370,7 @@ class Device:
     def __init__(self, engines: Optional[Sequence[StreamEngine]] = None, *,
                  n_instances: int = 1,
                  policy: Union[str, SubmitPolicy, None] = "round_robin",
+                 wait_policy: Union[str, WaitPolicy, None] = "umwait",
                  config: Optional[DeviceConfig] = None,
                  wq_configs: Optional[Sequence[WQConfig]] = None,
                  pes_per_group: int = 4,
@@ -390,6 +413,26 @@ class Device:
         # locking) so background submitters — e.g. async checkpoint CRCs —
         # can share the device with foreground traffic
         self._engine_lock = threading.RLock()
+        # ---- completion subsystem (core/completion.py) -------------------
+        # default wait scheme for this device; every wait can override it
+        self.wait_policy = get_wait_policy(wait_policy)
+        # host-busy/host-free cycle accounting per policy name (Fig. 11)
+        self.wait_stats: Dict[str, WaitStats] = defaultdict(WaitStats)
+        # live futures keyed by their record's identity, so an engine
+        # completion notification finds its Future without a scan; weak so
+        # dropped futures don't pin results
+        self._inflight: "weakref.WeakValueDictionary[int, Future]" = (
+            weakref.WeakValueDictionary()
+        )
+        self._sinks: List[Any] = []  # registered CompletionSets
+        self._sinks_lock = threading.Lock()
+        # engine notifications arrive while _engine_lock is held; user
+        # callbacks must NOT run under it (a blocking callback would
+        # deadlock against other waiters), so notifications queue here and
+        # dispatch after the lock is released
+        self._done_notifications: "deque[Future]" = deque()
+        for e in self.engines:
+            e.add_listener(self._on_record_done)
 
     # ------------------------------------------------------------------ submit
     def submit(self, desc: Submittable, *, after: Optional[Sequence[Any]] = None,
@@ -415,12 +458,19 @@ class Device:
                 status, rec = eng.submit(desc, group=group, wq=wq,
                                          priority=priority,
                                          producer=producer, after=deps)
+            self._dispatch_done()  # retirals observed by the submit's kick
             if status != Status.RETRY:
                 with self._lock:
                     self.policy_stats["decisions"][eng.name] += 1
                     self.policy_stats["decisions_by_op"][f"{eng.name}/{op_name(desc)}"] += 1
                     self.policy_stats["backoff_retries"] += attempt
-                return Future(self, eng, rec)
+                fut = Future(self, eng, rec)
+                self._inflight[id(rec)] = fut
+                if rec.is_done():
+                    # completed (or failed its fence) before the Future
+                    # existed: the engine notification missed the registry
+                    self._on_future_done(fut)
+                return fut
             self.kick()  # give PEs a chance to retire and free WQ slots
             time.sleep(delay)
             delay *= 2
@@ -440,6 +490,94 @@ class Device:
             any(w.name == name for g in e.config.groups for w in g.wqs)
             for e in self.engines
         )
+
+    # ------------------------------------------------------------------ completion
+    def _resolve_wait_policy(self, policy: Union[str, WaitPolicy, None]) -> WaitPolicy:
+        return self.wait_policy if policy is None else get_wait_policy(policy)
+
+    def _wait_bucket(self, name: str) -> WaitStats:
+        """Per-policy WaitStats, created under the device lock so two
+        threads' first waits can't race defaultdict.__missing__ and strand
+        one thread's counts in an orphaned bucket."""
+        with self._lock:
+            return self.wait_stats[name]
+
+    def _on_record_done(self, rec: CompletionRecord):
+        """Engine completion notification (runs under _engine_lock): queue
+        the resolved record's Future; callbacks and completion-set delivery
+        happen in _dispatch_done once the lock is released."""
+        fut = self._inflight.pop(id(rec), None)
+        if fut is not None:
+            self._done_notifications.append(fut)
+
+    def _dispatch_done(self):
+        """Fire queued completion notifications — exactly-once callbacks
+        plus delivery to registered sets — outside the engine lock."""
+        while True:
+            try:
+                fut = self._done_notifications.popleft()
+            except IndexError:
+                return
+            self._on_future_done(fut)
+
+    def _on_future_done(self, fut: "Future"):
+        fut._fire_callbacks()
+        with self._sinks_lock:
+            sinks = list(self._sinks)
+        for sink in sinks:
+            sink._deliver(fut)
+
+    def _add_sink(self, sink):
+        with self._sinks_lock:
+            self._sinks.append(sink)
+
+    def _remove_sink(self, sink):
+        with self._sinks_lock:
+            try:
+                self._sinks.remove(sink)
+            except ValueError:
+                pass
+
+    def _inflight_work(self):
+        """What a parked wait policy blocks on (the UMWAIT monitor arm):
+        (PE worker handles still executing, array leaves of dispatched
+        outputs not yet device-ready)."""
+        with self._engine_lock:
+            work: List[Any] = []
+            leaves: List[Any] = []
+            for e in self.engines:
+                for slots in e._slots.values():
+                    for s in slots:
+                        if s.record is None or s.record.is_done():
+                            continue
+                        if s.work is not None and not s.work.done():
+                            work.append(s.work)
+                        elif s.outputs is not None:
+                            leaves.extend(jax.tree.leaves(s.outputs))
+            return work, leaves
+
+    def wait_any(self, futures: Sequence["Future"], *,
+                 policy: Union[str, WaitPolicy, None] = None,
+                 timeout: Optional[float] = None):
+        """Wait until at least one of ``futures`` completes; returns
+        ``(done, pending)``.  ``timeout=0`` is a single non-parking poll
+        pass — the pipeline-friendly form."""
+        return _completion.wait_any(self, futures, policy=policy, timeout=timeout)
+
+    def wait_all(self, futures: Sequence["Future"], *,
+                 policy: Union[str, WaitPolicy, None] = None,
+                 timeout: Optional[float] = None):
+        """Wait until every future completes (raises WaitTimeout past the
+        deadline); returns the futures.  Failures are 'complete' — call
+        ``result()`` per future to raise."""
+        return _completion.wait_all(self, futures, policy=policy, timeout=timeout)
+
+    def as_completed(self, futures: Sequence["Future"], *,
+                     policy: Union[str, WaitPolicy, None] = None,
+                     timeout: Optional[float] = None) -> Iterator["Future"]:
+        """Iterate ``futures`` in completion order, driving one wait-policy
+        loop for the whole set."""
+        return _completion.as_completed(self, futures, policy=policy, timeout=timeout)
 
     # ------------------------------------------------------------------ async ops
     def memcpy_async(self, src: jax.Array, **kw):
@@ -469,6 +607,23 @@ class Device:
             WorkDescriptor(op=OpType.DELTA_APPLY, src=ref, src_idx=offsets, src2=data), **kw
         )
 
+    def compare_pattern_async(self, buf, pattern, **kw):
+        return self.submit(
+            WorkDescriptor(op=OpType.COMPARE_PATTERN, src=buf, pattern=pattern), **kw
+        )
+
+    def dif_insert_async(self, buf, **kw):
+        """Frame ``buf`` with per-block DIF tags (CRC + ref/app tag)."""
+        return self.submit(WorkDescriptor(op=OpType.DIF_INSERT, src=buf), **kw)
+
+    def dif_check_async(self, framed, **kw):
+        """Verify per-block DIF tags; resolves to the ok-mask per block."""
+        return self.submit(WorkDescriptor(op=OpType.DIF_CHECK, src=framed), **kw)
+
+    def dif_strip_async(self, framed, **kw):
+        """Drop DIF framing, recovering the raw word stream."""
+        return self.submit(WorkDescriptor(op=OpType.DIF_STRIP, src=framed), **kw)
+
     def batch_copy_async(self, src_pool, dst_pool, src_idx, dst_idx, **kw):
         return self.submit(
             WorkDescriptor(op=OpType.BATCH_COPY, src=src_pool, dst_pool=dst_pool,
@@ -479,17 +634,11 @@ class Device:
         return self.submit(BatchDescriptor(descriptors=list(descriptors)), **kw)
 
     # ------------------------------------------------------------------ sync sugar
-    def wait(self, handle) -> Any:
-        if isinstance(handle, Future):
-            return handle.wait()
-        eng, rec = handle  # legacy (engine, record) tuples from the Stream shim
-        return eng.wait(rec)
+    def wait(self, fut: Future, *, policy: Union[str, WaitPolicy, None] = None) -> Any:
+        return fut.wait(policy=policy)
 
-    def poll(self, handle) -> bool:
-        if isinstance(handle, Future):
-            return handle.poll()
-        eng, rec = handle
-        return eng.poll(rec)
+    def poll(self, fut: Future) -> bool:
+        return fut.poll()
 
     def memcpy(self, src):
         return self.wait(self.memcpy_async(src))
@@ -508,10 +657,12 @@ class Device:
 
     # ------------------------------------------------------------------ lifecycle
     def kick(self):
-        """Pump every instance's arbiter + deferred fences once."""
+        """Pump every instance's arbiter + deferred fences once; completion
+        callbacks for anything that retired fire after the lock drops."""
         with self._engine_lock:
             for e in self.engines:
                 e.kick()
+        self._dispatch_done()
 
     def drain(self):
         """Run all instances dry, including cross-engine fences: a deferred
@@ -519,27 +670,31 @@ class Device:
         because every engine is pumped each round."""
         while True:
             with self._engine_lock:
-                self.kick()
                 for e in self.engines:
+                    e.kick()
                     e.drain()
                 pending = any(e._deferred for e in self.engines) or any(
                     len(w) for e in self.engines for g in e.config.groups for w in g.wqs
                 )
-                if not pending:
-                    break
-                released = False
-                for e in self.engines:
-                    for *_, deps, _rec in e._deferred:
-                        if all(d.is_done() for d in deps):
-                            released = True
-                if not released:
-                    # remaining fences wait on unresolved promises; nothing
-                    # an engine pump can do
-                    break
+                done = not pending
+                if pending:
+                    released = False
+                    for e in self.engines:
+                        for *_, deps, _rec in e._deferred:
+                            if all(d.is_done() for d in deps):
+                                released = True
+                    if not released:
+                        # remaining fences wait on unresolved promises;
+                        # nothing an engine pump can do
+                        done = True
+            self._dispatch_done()  # callbacks fire outside the lock
+            if done:
+                return
 
 
 def make_device(n_instances: int = 1, *,
                 policy: Union[str, SubmitPolicy, None] = "round_robin",
+                wait_policy: Union[str, WaitPolicy, None] = "umwait",
                 wq_configs: Optional[Sequence[WQConfig]] = None,
                 max_retries: int = 10, backoff_base_s: float = 20e-6,
                 **cfg_kw) -> Device:
@@ -548,16 +703,18 @@ def make_device(n_instances: int = 1, *,
     ``wq_configs`` provisions each instance from WQCFG records (mode, size
     partition, priority, traffic class — Fig. 9 knobs); otherwise ``cfg_kw``
     forwards to DeviceConfig.default (wqs_per_group, wq_size, wq_mode,
-    pes_per_group, n_groups)."""
+    pes_per_group, n_groups).  ``wait_policy`` sets the default completion
+    wait scheme (spin / pause / umwait / interrupt — Fig. 11)."""
     if wq_configs is not None:
         pes = cfg_kw.pop("pes_per_group", 4)
         if cfg_kw:
             raise ValueError(f"wq_configs replaces default-config knobs; "
                              f"unexpected {sorted(cfg_kw)}")
         return Device(n_instances=n_instances, policy=policy,
+                      wait_policy=wait_policy,
                       wq_configs=wq_configs, pes_per_group=pes,
                       max_retries=max_retries, backoff_base_s=backoff_base_s)
     engines = [StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
                for i in range(n_instances)]
-    return Device(engines, policy=policy, max_retries=max_retries,
-                  backoff_base_s=backoff_base_s)
+    return Device(engines, policy=policy, wait_policy=wait_policy,
+                  max_retries=max_retries, backoff_base_s=backoff_base_s)

@@ -22,7 +22,10 @@ VMEM tier (DDIO analogue, Fig. 12).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import os
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -49,6 +52,26 @@ def _ready(x) -> bool:
         return x.is_ready()
     except AttributeError:
         return True
+
+
+# The PE "fabric": kernel dispatch runs on worker threads so descriptors
+# genuinely stream while the submitting thread is parked (XLA:CPU dispatches
+# big computations synchronously in the calling thread, which would
+# otherwise serialize the engine into the host).  One shared pool — per-PE
+# concurrency is already bounded by each group's slot count.
+_PE_POOL: Optional[concurrent.futures.ThreadPoolExecutor] = None
+_PE_POOL_LOCK = threading.Lock()
+
+
+def _pe_pool() -> concurrent.futures.ThreadPoolExecutor:
+    global _PE_POOL
+    with _PE_POOL_LOCK:
+        if _PE_POOL is None:
+            _PE_POOL = concurrent.futures.ThreadPoolExecutor(
+                max_workers=max(os.cpu_count() or 4, 4),
+                thread_name_prefix="pe",
+            )
+        return _PE_POOL
 
 
 @dataclasses.dataclass
@@ -102,10 +125,15 @@ class DeviceConfig:
 
 
 class _PESlot:
-    """One in-flight descriptor on a processing engine."""
+    """One in-flight descriptor on a processing engine.
+
+    ``work`` is the PE worker's handle (dispatch runs off-thread); once it
+    resolves, ``outputs`` holds the dispatched arrays and retirement waits
+    only on their device-side readiness."""
 
     def __init__(self):
         self.record: Optional[CompletionRecord] = None
+        self.work: Optional[concurrent.futures.Future] = None
         self.outputs: Any = None
         self.t0: float = 0.0
 
@@ -116,6 +144,25 @@ class _PESlot:
     def try_retire(self) -> bool:
         if self.record is None:
             return False
+        if self.work is not None:
+            if not self.work.done():
+                return False
+            rec = self.record
+            try:
+                outputs, nbytes, modeled_us = self.work.result()
+            except Exception as e:  # noqa: BLE001 — kernel dispatch failed
+                rec.status = Status.ERROR
+                rec.error = f"{type(e).__name__}: {e}"
+                rec.wall_time_us = (time.perf_counter() - self.t0) * 1e6
+                self.record = None
+                self.work = None
+                self.outputs = None
+                return True
+            rec.result = outputs
+            rec.bytes_processed = nbytes
+            rec.modeled_time_us = modeled_us
+            self.outputs = outputs
+            self.work = None
         leaves = jax.tree.leaves(self.outputs)
         if all(_ready(x) for x in leaves):
             self.record.wall_time_us = (time.perf_counter() - self.t0) * 1e6
@@ -126,6 +173,14 @@ class _PESlot:
             return True
         return False
 
+    def block(self):
+        """Host-side block until this slot's descriptor can retire (the
+        targeted UMWAIT): join the PE worker, then the dispatched arrays."""
+        if self.work is not None:
+            self.work.exception()  # wait; failures surface at try_retire
+        if self.outputs is not None:
+            jax.block_until_ready(jax.tree.leaves(self.outputs))
+
 
 class StreamEngine:
     """One DSA-instance analogue."""
@@ -133,6 +188,10 @@ class StreamEngine:
     def __init__(self, config: Optional[DeviceConfig] = None, name: str = "dsa0"):
         self.config = config or DeviceConfig.default()
         self.name = name
+        # completion listeners (core/completion.py): called with each
+        # CompletionRecord as it resolves, so a Device can feed its
+        # completion sets without anyone pumping per-record
+        self._listeners: List[Any] = []
         self.interpret = (
             self.config.interpret
             if self.config.interpret is not None
@@ -155,6 +214,25 @@ class StreamEngine:
         self.max_deferred = 4 * sum(
             w.size for g in self.config.groups for w in g.wqs
         )
+
+    # ------------------------------------------------------------------ completion notify
+    def add_listener(self, fn) -> None:
+        """Register ``fn(record)`` to run when any completion record on this
+        engine resolves (success, error, or failed fence)."""
+        self._listeners.append(fn)
+
+    def _notify(self, rec: CompletionRecord) -> None:
+        for fn in self._listeners:
+            fn(rec)
+
+    def _retire(self, slot: "_PESlot") -> bool:
+        """try_retire + completion notification (the IRQ/monitored-write
+        analogue: fires exactly when the record transitions to done)."""
+        rec = slot.record
+        if slot.try_retire():
+            self._notify(rec)
+            return True
+        return False
 
     # ------------------------------------------------------------------ submission
     def wq(self, group: int = 0, wq: int = 0) -> WorkQueue:
@@ -213,6 +291,7 @@ class StreamEngine:
                                    op=op_name(desc),
                                    error=f"dependency failed: {failed.status.name}")
             self.records[desc.desc_id] = rec
+            self._notify(rec)
             return Status.ERROR, rec
         deps = [d for d in after if not d.is_done()]
         if deps:
@@ -248,6 +327,7 @@ class StreamEngine:
             if failed is not None:
                 rec.status = Status.ERROR
                 rec.error = f"dependency failed: {failed.status.name}"
+                self._notify(rec)
                 continue
             remaining = [d for d in deps if not d.is_done()]
             if remaining:
@@ -266,7 +346,7 @@ class StreamEngine:
         for g in self.config.groups:
             slots = self._slots[g.name]
             for slot in slots:
-                slot.try_retire()
+                self._retire(slot)
             free = [s for s in slots if not s.busy]
             while free:
                 picked = self._arbitrate(g)
@@ -320,19 +400,19 @@ class StreamEngine:
                 enqcmd_s = self.model.enqcmd_overhead_s
         slot.record = rec
         slot.t0 = time.perf_counter()
-        try:
+        slot.outputs = None
+
+        def work(desc=desc, dst_tier=dst_tier, enqcmd_s=enqcmd_s):
+            # runs on a PE worker thread: the dispatch (and, on platforms
+            # where XLA dispatches synchronously, the whole kernel) happens
+            # off the submitting thread, so a parked host is genuinely free
             if isinstance(desc, BatchDescriptor):
                 outputs, nbytes, modeled = self._execute_batch(desc, dst_tier=dst_tier)
             else:
                 outputs, nbytes, modeled = self._execute_one(desc, dst_tier=dst_tier)
-            rec.result = outputs
-            rec.bytes_processed = nbytes
-            rec.modeled_time_us = (modeled + enqcmd_s) * 1e6
-            slot.outputs = outputs
-        except Exception as e:  # noqa: BLE001
-            rec.status = Status.ERROR
-            rec.error = f"{type(e).__name__}: {e}"
-            slot.record = None
+            return outputs, nbytes, (modeled + enqcmd_s) * 1e6
+
+        slot.work = _pe_pool().submit(work)
 
     def _execute_one(self, d: WorkDescriptor, dst_tier: str = "hbm"):
         it = self.interpret
@@ -435,8 +515,8 @@ class StreamEngine:
                 for slots in self._slots.values():
                     for s in slots:
                         if s.record is rec:
-                            jax.block_until_ready(jax.tree.leaves(s.outputs))
-                            s.try_retire()
+                            s.block()
+                            self._retire(s)
         self.kick()
         return rec.result
 
@@ -453,5 +533,5 @@ class StreamEngine:
             for slots in self._slots.values():
                 for s in slots:
                     if s.busy:
-                        jax.block_until_ready(jax.tree.leaves(s.outputs))
-                        s.try_retire()
+                        s.block()
+                        self._retire(s)

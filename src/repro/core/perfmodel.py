@@ -61,6 +61,14 @@ class EngineModel:
     # nothing).  Paper §3.2: ~3x the posted submit cost at low thread counts.
     enqcmd_overhead_s: float = 0.9e-6
     completion_poll_s: float = 0.2e-6  # completion-record check (UMWAIT analogue)
+    # completion-wait constants (paper Fig. 11 / "choose your wait scheme"):
+    # PAUSE keeps the core busy but throttles the poll loop; UMWAIT parks the
+    # core (C0.2) and pays an exit latency on the monitored write; an
+    # interrupt frees the core entirely but costs delivery + handler +
+    # reschedule per (coalesced) completion group.
+    pause_poll_s: float = 0.1e-6  # one PAUSE-throttled poll iteration
+    umwait_wake_s: float = 0.5e-6  # C0.2 exit latency on the completion write
+    irq_cost_s: float = 4e-6  # interrupt delivery + handler + context switch
     pe_peak_bw: float = 819e9 / 2  # HBM copy roofline (rd+wr)
     pe_ramp_bytes: float = 32e3  # half-saturation transfer size per descriptor
     per_pe_frac: float = 0.75  # single-PE sustained fraction (read buffers)

@@ -5,9 +5,11 @@ outbound traffic and request count on each DSA instance").
 Counters per engine instance: per-op x size-class counts/bytes/latency, WQ
 occupancy samples, retry totals.  When attached to a ``Device``, the
 snapshot also attributes submissions per policy decision (which instance
-the SubmitPolicy routed each op to, plus backoff pressure).  ``report()``
-renders the PCM-style table; ``snapshot()`` returns a dict for
-programmatic use.
+the SubmitPolicy routed each op to, plus backoff pressure) and reports the
+completion-wait accounting per WaitPolicy — host-busy vs host-free cycles,
+wakes, IRQs, and the measured host-free fraction (the paper's Fig. 11
+"umwait fraction", measured instead of assumed).  ``report()`` renders the
+PCM-style table; ``snapshot()`` returns a dict for programmatic use.
 """
 from __future__ import annotations
 
@@ -123,6 +125,12 @@ class Telemetry:
                 "backoff_retries": ps["backoff_retries"],
                 "queue_full": ps["queue_full"],
             }
+            # per-WaitPolicy host-cycle accounting (Fig. 11, measured);
+            # copy first: waiters on other threads may add policy buckets
+            out["wait"] = {
+                name: ws.as_dict()
+                for name, ws in sorted(dict(self.device.wait_stats).items())
+            }
         return out
 
     def report(self) -> str:
@@ -152,6 +160,14 @@ class Telemetry:
             lines.append(
                 f"  policy {pol['name']}: placements [{placed or 'none'}] "
                 f"backoff_retries={pol['backoff_retries']} queue_full={pol['queue_full']}"
+            )
+        for name, w in snap.get("wait", {}).items():
+            lines.append(
+                f"  wait {name}: waits={w['waits']} polls={w['polls']} "
+                f"wakes={w['wakes']} irqs={w['irqs']} "
+                f"busy={w['busy_s']*1e3:.2f}ms free={w['free_s']*1e3:.2f}ms "
+                f"host_free={w['host_free_frac']:.1%} "
+                f"(modeled wake/irq overhead {w['modeled_overhead_s']*1e6:.1f}us)"
             )
         return "\n".join(lines)
 

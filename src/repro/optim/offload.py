@@ -75,6 +75,10 @@ class MomentOffloader:
     def _move_both(self, opt_state):
         fm = self._move_tree_async(opt_state.m)
         fv = self._move_tree_async(opt_state.v)  # in flight together
+        # one set-wait retires both round-trips (completion subsystem): the
+        # host parks under the device's wait policy instead of pumping fm
+        # to completion before even looking at fv
+        self.device.wait_all([fm, fv])
         return opt_state._replace(m=fm.result(), v=fv.result())
 
     def offload(self, opt_state):

@@ -3,8 +3,10 @@ pattern (§6.4) mapped onto LLM decode:
 
   virtqueue            -> request queue + fixed decode slots
   packet copy          -> KV page / prompt movement through the stream engine
-  3-stage pipeline     -> (1) poll completion records of last iteration's
-                          copies and commit IN ORDER via the reorder array;
+  3-stage pipeline     -> (1) one ``device.wait_any`` pass over the in-flight
+                          copy futures (timeout=0: a single UMWAIT-style
+                          poll, no busy loop) and commit IN ORDER via the
+                          reorder array;
                           (2) assemble + submit this iteration's batched
                           copy descriptors (one BatchDescriptor per burst,
                           G1: burst size ~32);
@@ -71,6 +73,11 @@ class ReorderArray:
             out.append((tag, payload))
         return out
 
+    def pending_futures(self) -> List[Any]:
+        """The in-flight entries' futures, head first — the wait set for
+        ``device.wait_any``/``as_completed``."""
+        return [fut for _, fut, _ in self._entries]
+
     def __len__(self):
         return len(self._entries)
 
@@ -79,16 +86,9 @@ class VhostStyleServer:
     """Greedy-decode continuous batching over a DecoderModel."""
 
     def __init__(self, model, params, *, slots: int = 4, max_cache_len: int = 256,
-                 device: Optional[Device] = None, burst: int = 32,
-                 stream: Optional[Device] = None):
+                 device: Optional[Device] = None, burst: int = 32):
         from repro.launch.steps import make_decode_step, make_prefill_step
 
-        if device is None and stream is not None:  # deprecated alias
-            import warnings
-
-            warnings.warn("VhostStyleServer(stream=...) is deprecated; pass device=",
-                          DeprecationWarning, stacklevel=2)
-            device = stream
         self.model = model
         self.params = params
         self.slots = slots
@@ -115,8 +115,18 @@ class VhostStyleServer:
         self.queue.append(req)
 
     # ------------------------------------------------------------------ stage 1: poll + in-order commit
-    def _stage_poll_commit(self):
-        self.device.kick()  # UMWAIT poll: retire finished copies
+    def _stage_poll_commit(self, block: bool = False):
+        """One completion-subsystem pass over the in-flight copy futures.
+
+        ``timeout=0`` makes ``wait_any`` a single wait-policy poll (no busy
+        loop) so decode still overlaps the copies; ``block=True`` — used
+        when draining with nothing else to run — parks the host on the HEAD
+        future (in-order commit can't advance past it) under the device's
+        wait policy, freeing the cycles the paper's Fig. 11 measures."""
+        futs = self.reorder.pending_futures()
+        if futs:
+            self.device.wait_any(futs[:1] if block else futs,
+                                 timeout=None if block else 0)
         for _, payload in self.reorder.pop_completed():
             slot, req = payload
             self._admit_now(slot, req)
@@ -147,8 +157,6 @@ class VhostStyleServer:
             ]
             fut = self.device.batch_async(descs, producer=f"slot{slot}",
                                           wq=self._copy_wq)
-            if isinstance(fut, tuple):  # legacy Stream shim: (engine, record)
-                fut = fut[1]
             self.reorder.push(self._tag, fut, (slot, req))
             self._tag += 1
             self.metrics["copy_bursts"] += 1
@@ -174,7 +182,15 @@ class VhostStyleServer:
 
     # ------------------------------------------------------------------ loop
     def step(self):
-        self._stage_poll_commit()   # (1) completions -> in-order admit
+        # (1) completions -> in-order admit.  With decode work in flight OR
+        # queued requests that stage 2 can still submit (a free slot
+        # exists), the pass is non-blocking (timeout=0) so compute and new
+        # copy bursts overlap the in-flight ones (G2); when neither stage
+        # can make progress, park on the head copy under the device's wait
+        # policy instead of spinning the loop.
+        can_submit = bool(self.queue) and bool(self._free_slots)
+        self._stage_poll_commit(block=not self.active and not can_submit
+                                and len(self.reorder) > 0)
         self._stage_submit_copies() # (2) batch descriptors for new requests
         self._stage_decode()        # (3) compute overlapped with copies
         self.metrics["steps"] += 1

@@ -136,20 +136,20 @@ def test_completion_record_timing_fields(rng):
     assert fut.record.wall_time_us >= 0
 
 
-def test_stream_shim_still_works(rng):
-    """The deprecated Stream facade keeps the (engine, record) handle API
-    for one release, with a DeprecationWarning."""
-    from repro.core import make_stream
+def test_stream_shim_removed_with_pointer():
+    """The deprecated Stream/make_stream shims are gone after their one
+    grace release; residual imports fail with a migration-guide pointer."""
+    import repro.core
+    import repro.core.api
 
-    with pytest.warns(DeprecationWarning):
-        s = make_stream(n_instances=2)
-    x = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
-    h = s.memcpy_async(x)
-    assert isinstance(h, tuple) and len(h) == 2
-    out = s.wait(h)
-    assert np.allclose(np.asarray(out), np.asarray(x))
-    eng, rec = h
-    assert rec.status == Status.SUCCESS
+    for module in (repro.core, repro.core.api):
+        for name in ("Stream", "make_stream"):
+            with pytest.raises(AttributeError, match="docs/api.md"):
+                getattr(module, name)
+    # the from-import form fails too (the import machinery rewraps the
+    # AttributeError, so the pointer text is only on the attribute path)
+    with pytest.raises(ImportError):
+        from repro.core import make_stream  # noqa: F401
 
 
 def test_batch_fusion_respects_flags(rng):

@@ -248,21 +248,6 @@ def test_fence_list_is_bounded():
     assert not eng._deferred
 
 
-def test_stream_shim_never_raises_queuefull(rng):
-    """Legacy Stream callers predate QueueFull: the shim keeps the old
-    spin-until-accepted ENQCMD semantics."""
-    from repro.core import make_stream
-
-    with pytest.warns(DeprecationWarning):
-        s = make_stream(wqs_per_group=1, wq_size=2, wq_mode="shared")
-    s.max_retries = 1
-    s.backoff_base_s = 1e-6
-    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
-    handles = [s.memcpy_async(x) for _ in range(10)]  # >> wq_size, no raise
-    for h in handles:
-        assert np.allclose(np.asarray(s.wait(h)), np.asarray(x))
-
-
 def test_shared_device_across_threads(rng):
     """Two threads submitting through one Device (the async-checkpoint
     pattern) must not lose completions."""
