@@ -34,6 +34,7 @@ MODULES = [
     "fig10_multi_instance",
     "fig11_umwait",
     "fig12_cache_pollution",
+    "fig13_cross_numa",
     "fig14_ts_bs",
     "fig16_vhost",
     "appendix_checkpoint",

@@ -33,6 +33,7 @@ from repro.core.device import (
     Device,
     Future,
     LeastLoadedPolicy,
+    NumaLocalPolicy,
     Promise,
     QueueFull,
     RoundRobinPolicy,
@@ -44,6 +45,7 @@ from repro.core.device import (
 from repro.core.engine import DeviceConfig, GroupConfig, StreamEngine
 from repro.core.perfmodel import DEFAULT_MODEL, EngineModel, TIERS
 from repro.core.queues import TRAFFIC_CLASSES, WorkQueue, WQConfig
+from repro.core.topology import Link, Node, Topology
 
 __all__ = [
     "BatchDescriptor",
@@ -58,6 +60,9 @@ __all__ = [
     "GroupConfig",
     "InterruptWait",
     "LeastLoadedPolicy",
+    "Link",
+    "Node",
+    "NumaLocalPolicy",
     "OpType",
     "PauseWait",
     "Promise",
@@ -69,6 +74,7 @@ __all__ = [
     "StreamEngine",
     "SubmitPolicy",
     "TIERS",
+    "Topology",
     "TRAFFIC_CLASSES",
     "UmwaitWait",
     "WAIT_POLICIES",

@@ -64,6 +64,12 @@ class WorkDescriptor:
     dst_pool: Any = None
     src_idx: Any = None
     dst_idx: Any = None
+    # buffer locality (paper §4 / Fig. 13): home node of each operand.  None
+    # means "wherever the engine runs" — the Device stamps registered homes
+    # (or a per-submit ``node=`` hint) before placement, and the engine
+    # charges the inter-node link for every operand on a foreign node.
+    src_node: Optional[int] = None
+    dst_node: Optional[int] = None
     # metadata
     desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     priority: int = 0
@@ -87,6 +93,10 @@ class BatchDescriptor:
     batches are processed back-to-back under one completion record."""
 
     descriptors: Sequence[WorkDescriptor]
+    # batch-level locality: the dominant home nodes across members (stamped
+    # by the Device alongside each member's own src_node/dst_node)
+    src_node: Optional[int] = None
+    dst_node: Optional[int] = None
     desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     priority: int = 0
 
@@ -110,6 +120,13 @@ class CompletionRecord:
     wq: Optional[str] = None
     queue_delay_us: float = 0.0
     steering: Optional[str] = None  # "to_cache" | "to_memory"
+    # NUMA placement attribution (paper §4 / Fig. 13): where the servicing
+    # engine lives, the operands' home nodes, and how many inter-node link
+    # crossings the transfer was charged (0 = fully local)
+    engine_node: int = 0
+    src_node: int = 0
+    dst_node: int = 0
+    link_hops: int = 0
 
     def is_done(self) -> bool:
         return self.status in (Status.SUCCESS, Status.ERROR, Status.OVERFLOW)

@@ -48,6 +48,7 @@ from repro.core.descriptor import (
 )
 from repro.core.engine import DeviceConfig, StreamEngine
 from repro.core.queues import Submittable, WQConfig
+from repro.core.topology import Topology
 
 
 class QueueFull(RuntimeError):
@@ -339,10 +340,40 @@ class StickyPolicy(SubmitPolicy):
         return engines[h % len(engines)]
 
 
+class NumaLocalPolicy(SubmitPolicy):
+    """Locality first (paper §4 / Fig. 13: keep the engine and both buffers
+    NUMA-local): prefer engines on the descriptor's home node — the
+    destination's node when known (that's where the data lands), else the
+    source's — and apply the ``inner`` policy among them.  When every
+    home-node engine is saturated (aggregate WQ occupancy >= ``saturation``)
+    or the descriptor has no home, degrade gracefully to ``inner`` over ALL
+    engines: a remote engine beats a stalled submission."""
+
+    name = "numa_local"
+
+    def __init__(self, inner: Union[str, SubmitPolicy, None] = "least_loaded",
+                 saturation: float = 1.0):
+        self.inner = get_policy(inner)
+        self.saturation = saturation
+
+    def select(self, engines, desc, producer):
+        home = getattr(desc, "dst_node", None)
+        if home is None:
+            home = getattr(desc, "src_node", None)
+        if home is not None:
+            ready = [e for e in engines
+                     if getattr(e, "node_id", 0) == home
+                     and LeastLoadedPolicy.occupancy(e) < self.saturation]
+            if ready:
+                return self.inner.select(ready, desc, producer)
+        return self.inner.select(engines, desc, producer)
+
+
 POLICIES: Dict[str, Callable[[], SubmitPolicy]] = {
     "round_robin": RoundRobinPolicy,
     "least_loaded": LeastLoadedPolicy,
     "sticky": StickyPolicy,
+    "numa_local": NumaLocalPolicy,
 }
 
 
@@ -358,44 +389,80 @@ def get_policy(policy: Union[str, SubmitPolicy, None]) -> SubmitPolicy:
                          f"expected one of {sorted(POLICIES)}") from None
 
 
+def _dominant_node(nodes: Sequence[Optional[int]],
+                   default: Optional[int]) -> Optional[int]:
+    """Most common known home node in a batch (placement votes), or the
+    hint/None when no member has one."""
+    known = [n for n in nodes if n is not None]
+    if not known:
+        return default
+    return Counter(known).most_common(1)[0][0]
+
+
 # --------------------------------------------------------------------------- device
 class Device:
-    """Top-level submission facade over N StreamEngine instances.
+    """Top-level submission facade: a fabric of StreamEngine instances laid
+    out over a ``Topology`` of NUMA nodes (default: one node — the flat
+    pre-topology world, bit-for-bit compatible).
 
     Every submit routes through the SubmitPolicy, returns a Future, and
     turns WQ RETRY into bounded exponential backoff (max_retries doublings
     of backoff_base_s) ending in QueueFull — never an unbounded spin.
+
+    Locality (paper §4 / Fig. 13): ``register(array, node)`` records a
+    buffer's home node; each submission derives its operands' nodes from
+    the registry (or a per-submit ``node=`` hint), the policy can place it
+    accordingly (``numa_local``), and the engine charges the inter-node
+    link for every operand left on a foreign node.
     """
 
     def __init__(self, engines: Optional[Sequence[StreamEngine]] = None, *,
                  n_instances: int = 1,
+                 topology: Optional[Topology] = None,
                  policy: Union[str, SubmitPolicy, None] = "round_robin",
                  wait_policy: Union[str, WaitPolicy, None] = "umwait",
                  config: Optional[DeviceConfig] = None,
+                 config_kw: Optional[Dict[str, Any]] = None,
                  wq_configs: Optional[Sequence[WQConfig]] = None,
                  pes_per_group: int = 4,
                  max_retries: int = 10, backoff_base_s: float = 20e-6):
         if engines is not None:
-            if config is not None or wq_configs is not None:
+            if config is not None or wq_configs is not None or config_kw is not None:
                 raise ValueError("pass pre-built engines OR a config/wq_configs "
                                  "to build them from, not both")
             self.engines = list(engines)
-        elif wq_configs is not None:
-            if config is not None:
-                raise ValueError("pass either config= or wq_configs=, not both")
-            # each instance gets its own WorkQueue objects from the same
-            # WQCFG records (configs are frozen and shareable; queues are
-            # per-instance state)
-            self.engines = [
-                StreamEngine(DeviceConfig.from_wq_configs(
-                    wq_configs, pes_per_group=pes_per_group), name=f"dsa{i}")
-                for i in range(n_instances)
-            ]
+            self.topology = topology or Topology.single_node(len(self.engines))
         else:
-            self.engines = [
-                StreamEngine(config or DeviceConfig.default(), name=f"dsa{i}")
-                for i in range(n_instances)
-            ]
+            if config is not None and wq_configs is not None:
+                raise ValueError("pass either config= or wq_configs=, not both")
+            if config is not None and config_kw is not None:
+                raise ValueError("pass either config= or config_kw=, not both")
+            # nodes carry their own engine counts; without a topology,
+            # n_instances engines land on one node (the legacy shape)
+            self.topology = topology or Topology.single_node(n_instances)
+            self.engines = []
+            per_node = Counter()
+            for nid in self.topology.engine_nodes():
+                i = per_node[nid]
+                per_node[nid] += 1
+                if wq_configs is not None:
+                    # each instance gets its own WorkQueue objects from the
+                    # same WQCFG records (configs are frozen and shareable;
+                    # queues are per-instance state)
+                    cfg_e = DeviceConfig.from_wq_configs(
+                        wq_configs, pes_per_group=pes_per_group)
+                elif config is not None:
+                    cfg_e = config
+                else:
+                    cfg_e = DeviceConfig.default(**(config_kw or {}))
+                name = (f"dsa{i}" if self.topology.n_nodes == 1
+                        else f"n{nid}dsa{i}")
+                self.engines.append(StreamEngine(cfg_e, name=name, node_id=nid,
+                                                 topology=self.topology))
+        # buffer-locality registry: id(array) -> (home node, weakref); the
+        # weakref callback evicts the entry when the array dies, so a reused
+        # id can't inherit a stale home
+        self._homes: Dict[int, Any] = {}
         self.policy = get_policy(policy)
         self.max_retries = max_retries
         self.backoff_base_s = backoff_base_s
@@ -434,11 +501,56 @@ class Device:
         for e in self.engines:
             e.add_listener(self._on_record_done)
 
+    # ------------------------------------------------------------------ locality
+    def register(self, array: Any, node: int) -> Any:
+        """Record ``array``'s home node in the buffer-locality registry.
+        Descriptors naming it derive their src/dst node from here; returns
+        the array so registration chains through pool updates."""
+        if not 0 <= node < self.topology.n_nodes:
+            raise ValueError(
+                f"node {node} out of range for {self.topology.n_nodes}-node topology"
+            )
+        key = id(array)
+        try:
+            ref = weakref.ref(array, lambda _r, k=key: self._homes.pop(k, None))
+        except TypeError:
+            ref = None  # unreferenceable objects: entry lives forever
+        self._homes[key] = (node, ref)
+        return array
+
+    def home(self, array: Any, default: Optional[int] = None) -> Optional[int]:
+        """The registered home node of ``array`` (``default`` if unknown)."""
+        if array is None:
+            return default
+        ent = self._homes.get(id(array))
+        return ent[0] if ent is not None else default
+
+    def _stamp_locality(self, desc: Submittable, node_hint: Optional[int]) -> None:
+        """Resolve operand home nodes onto the descriptor before placement:
+        registry first, then the per-submit ``node=`` hint; operands still
+        unresolved stay None (= wherever the engine runs, i.e. local)."""
+        members = (desc.descriptors if isinstance(desc, BatchDescriptor)
+                   else (desc,))
+        for d in members:
+            if d.src_node is None:
+                d.src_node = self.home(d.src, node_hint)
+            if d.dst_node is None:
+                d.dst_node = (self.home(d.dst_pool, node_hint)
+                              if d.dst_pool is not None else node_hint)
+        if isinstance(desc, BatchDescriptor):
+            if desc.src_node is None:
+                desc.src_node = _dominant_node(
+                    [d.src_node for d in members], node_hint)
+            if desc.dst_node is None:
+                desc.dst_node = _dominant_node(
+                    [d.dst_node for d in members], node_hint)
+
     # ------------------------------------------------------------------ submit
     def submit(self, desc: Submittable, *, after: Optional[Sequence[Any]] = None,
                group: Optional[int] = None, wq: Union[int, str, None] = None,
                priority: Optional[int] = None,
-               producer: Optional[str] = None) -> Future:
+               producer: Optional[str] = None,
+               node: Optional[int] = None) -> Future:
         """Submit one descriptor; returns its Future.
 
         ``after``: Futures / CompletionRecords this descriptor must not
@@ -448,8 +560,12 @@ class Device:
         groups, or only ``group`` when one is pinned).  Both compose with
         the SubmitPolicy (the policy picks the instance, the hint picks
         the WQ on it) and with ``after=`` fences.
+        ``node``: home-node hint for operands the registry doesn't know —
+        the ``numa_local`` policy places the submission there and the
+        engine charges the link if placement lands elsewhere.
         Raises QueueFull when the target WQ stays full through every
         backoff attempt."""
+        self._stamp_locality(desc, node)
         eng = self.policy.select(self.engines, desc, producer)
         deps = list(after) if after is not None else None
         delay = self.backoff_base_s
@@ -482,6 +598,10 @@ class Device:
     def promise(self) -> Promise:
         """A host-completed fence Future (see Promise)."""
         return Promise(self)
+
+    def engines_on(self, node: int) -> List[StreamEngine]:
+        """The engine instances living on one NUMA node of the fabric."""
+        return [e for e in self.engines if getattr(e, "node_id", 0) == node]
 
     def has_wq(self, name: str) -> bool:
         """True when every instance exposes a WQ with this name (safe to use
@@ -696,25 +816,29 @@ def make_device(n_instances: int = 1, *,
                 policy: Union[str, SubmitPolicy, None] = "round_robin",
                 wait_policy: Union[str, WaitPolicy, None] = "umwait",
                 wq_configs: Optional[Sequence[WQConfig]] = None,
+                topology: Optional[Topology] = None,
                 max_retries: int = 10, backoff_base_s: float = 20e-6,
                 **cfg_kw) -> Device:
-    """Build a Device over n fresh engine instances (Fig. 10 topology).
+    """Build a Device over fresh engine instances (Fig. 10 topology).
 
-    ``wq_configs`` provisions each instance from WQCFG records (mode, size
-    partition, priority, traffic class — Fig. 9 knobs); otherwise ``cfg_kw``
-    forwards to DeviceConfig.default (wqs_per_group, wq_size, wq_mode,
-    pes_per_group, n_groups).  ``wait_policy`` sets the default completion
-    wait scheme (spin / pause / umwait / interrupt — Fig. 11)."""
+    ``topology`` lays the instances out over NUMA nodes (each ``Node``
+    names its own engine count; ``n_instances`` is ignored then) and turns
+    on cross-node link charging; the default is one flat node with
+    ``n_instances`` engines.  ``wq_configs`` provisions each instance from
+    WQCFG records (mode, size partition, priority, traffic class — Fig. 9
+    knobs); otherwise ``cfg_kw`` forwards to DeviceConfig.default
+    (wqs_per_group, wq_size, wq_mode, pes_per_group, n_groups).
+    ``wait_policy`` sets the default completion wait scheme (spin / pause /
+    umwait / interrupt — Fig. 11)."""
     if wq_configs is not None:
         pes = cfg_kw.pop("pes_per_group", 4)
         if cfg_kw:
             raise ValueError(f"wq_configs replaces default-config knobs; "
                              f"unexpected {sorted(cfg_kw)}")
-        return Device(n_instances=n_instances, policy=policy,
+        return Device(n_instances=n_instances, topology=topology, policy=policy,
                       wait_policy=wait_policy,
                       wq_configs=wq_configs, pes_per_group=pes,
                       max_retries=max_retries, backoff_base_s=backoff_base_s)
-    engines = [StreamEngine(DeviceConfig.default(**cfg_kw), name=f"dsa{i}")
-               for i in range(n_instances)]
-    return Device(engines, policy=policy, wait_policy=wait_policy,
+    return Device(n_instances=n_instances, topology=topology, policy=policy,
+                  wait_policy=wait_policy, config_kw=cfg_kw or None,
                   max_retries=max_retries, backoff_base_s=backoff_base_s)

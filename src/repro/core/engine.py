@@ -183,11 +183,25 @@ class _PESlot:
 
 
 class StreamEngine:
-    """One DSA-instance analogue."""
+    """One DSA-instance analogue.
 
-    def __init__(self, config: Optional[DeviceConfig] = None, name: str = "dsa0"):
+    ``node_id``/``topology`` place the instance on a NUMA node
+    (core/topology.py): descriptors whose operands live on a foreign node
+    are charged the inter-node link (bandwidth cap + latency per crossing),
+    and the node's tier table overrides the global one when set.  The
+    defaults (node 0, no topology) are the flat single-domain world."""
+
+    def __init__(self, config: Optional[DeviceConfig] = None, name: str = "dsa0",
+                 node_id: int = 0, topology: Optional[Any] = None):
         self.config = config or DeviceConfig.default()
         self.name = name
+        self.node_id = node_id
+        self.topology = topology
+        # only a multi-node fabric charges the link; a single node never does
+        self.link = (topology.link if topology is not None
+                     and getattr(topology, "n_nodes", 1) > 1 else None)
+        self._tiers = (topology.node(node_id).tiers if topology is not None
+                       else None)
         # completion listeners (core/completion.py): called with each
         # CompletionRecord as it resolves, so a Device can feed its
         # completion sets without anyone pumping per-record
@@ -388,6 +402,11 @@ class StreamEngine:
         if rec.op is None:
             rec.op = op_name(desc)
         rec.status = Status.RUNNING
+        sn, dn, hops = self._locality(desc)
+        rec.engine_node = self.node_id
+        rec.src_node = sn
+        rec.dst_node = dn
+        rec.link_hops = hops
         dst_tier = "hbm"
         enqcmd_s = 0.0
         if src_wq is not None:
@@ -414,6 +433,26 @@ class StreamEngine:
 
         slot.work = _pe_pool().submit(work)
 
+    def _locality(self, desc) -> Tuple[int, int, int]:
+        """Resolve a submittable's (src_node, dst_node, link_hops) relative
+        to this engine: an unstamped operand is wherever the engine runs."""
+        sn = getattr(desc, "src_node", None)
+        dn = getattr(desc, "dst_node", None)
+        sn = self.node_id if sn is None else sn
+        dn = self.node_id if dn is None else dn
+        hops = int(sn != self.node_id) + int(dn != self.node_id)
+        return sn, dn, hops
+
+    def _model_kw(self, kw: dict, dst_tier: str, hops: int) -> dict:
+        """Locality-aware op_time defaults: node tier table + link charge."""
+        kw.setdefault("dst_tier", dst_tier)
+        if self._tiers is not None:
+            kw.setdefault("tiers", self._tiers)
+        if hops and self.link is not None:
+            kw.setdefault("link", self.link)
+            kw.setdefault("link_hops", hops)
+        return kw
+
     def _execute_one(self, d: WorkDescriptor, dst_tier: str = "hbm"):
         it = self.interpret
         m = self.model
@@ -421,10 +460,10 @@ class StreamEngine:
         # per-descriptor TO_CACHE hints steer like a to_cache WQ (G3)
         if d.cache_hint == CacheHint.TO_CACHE:
             dst_tier = "vmem"
+        _, _, hops = self._locality(d)
 
         def t_op(nb, **kw):
-            kw.setdefault("dst_tier", dst_tier)
-            return m.op_time(nb, **kw)
+            return m.op_time(nb, **self._model_kw(kw, dst_tier, hops))
 
         if d.op == OpType.MEMCPY:
             out = ops.memcpy(d.src, interpret=it)
@@ -489,8 +528,10 @@ class StreamEngine:
             idx = jnp.arange(len(descs), dtype=jnp.int32)
             out = ops.batch_copy(pool, jnp.zeros_like(pool), idx, idx, interpret=self.interpret)
             nbytes = b.nbytes
-            t = self.model.op_time(descs[0].nbytes, batch_size=len(descs),
-                                   dst_tier=dst_tier)
+            _, _, hops = self._locality(b)
+            t = self.model.op_time(descs[0].nbytes,
+                                   **self._model_kw({"batch_size": len(descs)},
+                                                    dst_tier, hops))
             return list(out), nbytes, t
         outs = []
         nbytes = 0

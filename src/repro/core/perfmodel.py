@@ -20,7 +20,7 @@ instance scaling, saturation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 # memory tiers: sustained read/write bandwidth (B/s) + extra one-way latency.
 # The host tier is read-fast / write-slow like the paper's CXL device (G4:
@@ -77,10 +77,12 @@ class EngineModel:
     sw_launch_s: float = 2e-6  # XLA dispatch overhead
 
     # ------------------------------------------------------------------ engine
-    def _pair_bw(self, src_tier: str, dst_tier: str) -> float:
+    def _pair_bw(self, src_tier: str, dst_tier: str,
+                 tiers: Optional[Dict[str, Dict[str, float]]] = None) -> float:
+        t = TIERS if tiers is None else tiers
         if src_tier == dst_tier == "hbm":
             return self.pe_peak_bw
-        return min(TIERS[src_tier]["bw"], TIERS[dst_tier]["wr_bw"])
+        return min(t[src_tier]["bw"], t[dst_tier]["wr_bw"])
 
     def op_time(
         self,
@@ -92,15 +94,32 @@ class EngineModel:
         src_tier: str = "hbm",
         dst_tier: str = "hbm",
         read_factor: float = 1.0,  # dualcast reads once, writes twice => 1.5x
+        tiers: Optional[Dict[str, Dict[str, float]]] = None,  # per-node override
+        link: Optional[Any] = None,  # inter-node Link (topology.py): bw + lat_s
+        link_hops: int = 0,  # crossings: remote src/dst count 1 each (§4 / Fig. 13)
     ) -> float:
         """Seconds to complete ONE submission of ``batch_size`` descriptors of
-        ``nbytes`` each."""
-        pair = self._pair_bw(src_tier, dst_tier) / read_factor
+        ``nbytes`` each.
+
+        ``tiers`` overrides the global tier table (a NUMA node's local
+        memory); ``link``/``link_hops`` charge cross-node placement: each
+        crossing caps the pair bandwidth at ``link.bw / hops`` (the shared
+        UPI/ICI analogue — an engine remote from both buffers crosses
+        twice) and adds ``link.lat_s`` of one-way latency per hop, so any
+        remote placement is strictly slower than all-local at every size.
+        """
+        t = TIERS if tiers is None else {**TIERS, **tiers}
+        base = self._pair_bw(src_tier, dst_tier, t)
+        if link is not None and link_hops > 0:
+            base = min(base, link.bw / link_hops)
+        pair = base / read_factor
         ramp = nbytes / (nbytes + self.pe_ramp_bytes)
         # in-flight descriptors (batch members and async stream) spread over PEs
         concurrent = min(batch_size * max(async_depth, 1), n_pe)
         agg_bw = min(concurrent * self.per_pe_frac * ramp, 1.0) * pair
-        lat = max(TIERS[src_tier]["lat"] + TIERS[dst_tier]["lat"], 0.0)
+        lat = max(t[src_tier]["lat"] + t[dst_tier]["lat"], 0.0)
+        if link is not None and link_hops > 0:
+            lat += link_hops * link.lat_s
         launch = self.launch_overhead_s / max(async_depth, 1) + lat / max(async_depth, 1)
         submit = self.submit_overhead_s * batch_size + self.completion_poll_s
         return launch + submit + batch_size * nbytes / agg_bw

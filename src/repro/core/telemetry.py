@@ -53,6 +53,14 @@ class Telemetry:
             for e in self.engines
         }
         self.per_wq_ops = {e.name: defaultdict(OpCounter) for e in self.engines}
+        # per-NUMA-node traffic split (paper §4 / Fig. 13): bytes whose
+        # transfer stayed on the servicing engine's node vs. bytes charged
+        # inter-node link crossings; link_bytes weights by hop count (a
+        # double-remote transfer loads the link twice)
+        self.node_traffic: dict = defaultdict(
+            lambda: {"local_ops": 0, "local_bytes": 0,
+                     "cross_ops": 0, "cross_bytes": 0, "link_bytes": 0}
+        )
         self._seen: set = set()
         self.t0 = time.perf_counter()
 
@@ -74,6 +82,14 @@ class Telemetry:
                 c.bytes += rec.bytes_processed
                 c.modeled_us += rec.modeled_time_us
                 c.wall_us += rec.wall_time_us
+                nt = self.node_traffic[getattr(e, "node_id", 0)]
+                if rec.link_hops > 0:
+                    nt["cross_ops"] += 1
+                    nt["cross_bytes"] += rec.bytes_processed
+                    nt["link_bytes"] += rec.bytes_processed * rec.link_hops
+                else:
+                    nt["local_ops"] += 1
+                    nt["local_bytes"] += rec.bytes_processed
                 if rec.wq is not None:
                     wc = self.per_wq_ops[e.name][rec.wq]
                     wc.count += 1
@@ -116,6 +132,29 @@ class Telemetry:
                     k: dataclasses.asdict(v) for k, v in sorted(self.ops[e.name].items())
                 },
             }
+        # per-node rollup: engines grouped by NUMA node, local vs cross-node
+        # traffic, and the modeled inter-node link occupancy (link-seconds of
+        # cross traffic over wall time).  Sums across nodes equal the device
+        # totals — every record lands in exactly one node bucket.
+        topo = getattr(self.device, "topology", None) if self.device else None
+        if topo is None:
+            for e in self.engines:
+                topo = getattr(e, "topology", None)
+                if topo is not None:
+                    break
+        link_bw = topo.link.bw if topo is not None and topo.n_nodes > 1 else None
+        elapsed = max(out["elapsed_s"], 1e-12)
+        out["nodes"] = {}
+        for nid in sorted({getattr(e, "node_id", 0) for e in self.engines}):
+            nt = dict(self.node_traffic.get(nid) or
+                      {"local_ops": 0, "local_bytes": 0, "cross_ops": 0,
+                       "cross_bytes": 0, "link_bytes": 0})
+            nt["engines"] = [e.name for e in self.engines
+                             if getattr(e, "node_id", 0) == nid]
+            nt["link_occupancy"] = (
+                nt["link_bytes"] / link_bw / elapsed if link_bw else 0.0
+            )
+            out["nodes"][nid] = nt
         if self.device is not None:
             ps = self.device.policy_stats
             out["policy"] = {
@@ -154,6 +193,15 @@ class Telemetry:
                     f"    {key:>20s}: n={c['count']:<5d} bytes={c['bytes']:<12d} "
                     f"modeled={c['modeled_us']:.1f}us ({gbps:.1f}GB/s projected)"
                 )
+        for nid, n in snap.get("nodes", {}).items():
+            if len(snap.get("nodes", {})) == 1 and not n["cross_ops"]:
+                continue  # flat single-node device: nothing to attribute
+            lines.append(
+                f"  node {nid} [{', '.join(n['engines'])}]: "
+                f"local={n['local_bytes']}B/{n['local_ops']}ops "
+                f"cross={n['cross_bytes']}B/{n['cross_ops']}ops "
+                f"link_occ={n['link_occupancy']:.1%}"
+            )
         pol = snap.get("policy")
         if pol:
             placed = ", ".join(f"{k}={v}" for k, v in sorted(pol["decisions"].items()))

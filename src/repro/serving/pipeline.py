@@ -48,6 +48,10 @@ class Request:
     req_id: int
     prompt: np.ndarray  # [S] int32
     max_new_tokens: int = 16
+    # NUMA home (paper §4): the node whose engines move this request's pages
+    # and whose KV shard should hold them.  None = assigned at enqueue
+    # (round-robin across the fabric) or left unset on a single-node device.
+    home_node: Optional[int] = None
     arrived_at: float = dataclasses.field(default_factory=time.perf_counter)
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
@@ -86,14 +90,30 @@ class VhostStyleServer:
     """Greedy-decode continuous batching over a DecoderModel."""
 
     def __init__(self, model, params, *, slots: int = 4, max_cache_len: int = 256,
-                 device: Optional[Device] = None, burst: int = 32):
+                 device: Optional[Device] = None, burst: int = 32,
+                 topology=None):
         from repro.launch.steps import make_decode_step, make_prefill_step
 
         self.model = model
         self.params = params
         self.slots = slots
         self.max_cache_len = max_cache_len
-        self.device = device or Device(wq_configs=list(SERVING_WQ_CONFIGS))
+        if device is None:
+            # one engine group per node: the topology's per-node engine
+            # counts provision the fabric, and numa_local keeps each
+            # request's copies on its home node (paper §4 guideline)
+            device = Device(
+                wq_configs=list(SERVING_WQ_CONFIGS), topology=topology,
+                policy="numa_local" if topology is not None
+                and topology.n_nodes > 1 else "round_robin",
+            )
+        elif topology is not None:
+            raise ValueError("pass a pre-built device= OR a topology= to "
+                             "provision one from, not both (the device "
+                             "already fixes its fabric)")
+        self.device = device
+        self.topology = self.device.topology
+        self._node_rr = 0  # round-robin home-node assignment at enqueue
         self.burst = burst
         # admission copies gate time-to-first-token: steer them to the
         # high-priority WQ when the device has one, else the default WQ
@@ -108,10 +128,17 @@ class VhostStyleServer:
         self._tokens = jnp.zeros((slots, 1), jnp.int32)
         self._tag = 0
         self.metrics = {"decoded_tokens": 0, "admitted": 0, "completed": 0,
-                        "copy_bursts": 0, "steps": 0}
+                        "copy_bursts": 0, "steps": 0,
+                        "admitted_by_node": {}}
 
     # ------------------------------------------------------------------ API
     def enqueue(self, req: Request):
+        """Admit to the waiting queue; on a multi-node fabric, unassigned
+        requests get a home node round-robin so their copy bursts (and KV
+        pages) stay NUMA-local to one node's engine group."""
+        if req.home_node is None and self.topology.n_nodes > 1:
+            req.home_node = self._node_rr % self.topology.n_nodes
+            self._node_rr += 1
         self.queue.append(req)
 
     # ------------------------------------------------------------------ stage 1: poll + in-order commit
@@ -143,6 +170,9 @@ class VhostStyleServer:
         self._tokens = self._tokens.at[slot, 0].set(tok)
         self.active[slot] = req
         self.metrics["admitted"] += 1
+        if req.home_node is not None:
+            by_node = self.metrics["admitted_by_node"]
+            by_node[req.home_node] = by_node.get(req.home_node, 0) + 1
 
     # ------------------------------------------------------------------ stage 2: submit batched copies
     def _stage_submit_copies(self):
@@ -156,7 +186,8 @@ class VhostStyleServer:
                 for c in chunks[: self.burst]
             ]
             fut = self.device.batch_async(descs, producer=f"slot{slot}",
-                                          wq=self._copy_wq)
+                                          wq=self._copy_wq,
+                                          node=req.home_node)
             self.reorder.push(self._tag, fut, (slot, req))
             self._tag += 1
             self.metrics["copy_bursts"] += 1

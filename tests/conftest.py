@@ -7,10 +7,17 @@ from pathlib import Path
 # own flag as its first import action).
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import zlib
+
 import numpy as np
 import pytest
 
 
-@pytest.fixture(scope="session")
-def rng():
-    return np.random.default_rng(0)
+@pytest.fixture
+def rng(request):
+    """Deterministic PER TEST: the generator is keyed by the test's node id,
+    so every test draws the same stream whether it runs alone, in a file
+    subset, or in the full suite.  (The old session-scoped fixture advanced
+    one shared stream in collection order, so subsets saw different data
+    than the full run.)"""
+    return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))

@@ -1,0 +1,71 @@
+"""Regression gate over benchmark JSON rows.
+
+    python tools/bench_compare.py CURRENT.json BASELINE.json \
+        [--tolerance 0.20] [--match REGEX]
+
+Compares ``us_per_call`` per row name and exits 1 when any compared row is
+more than ``tolerance`` slower than the committed baseline (default 20%).
+Rows with ``us_per_call <= 0`` carry derived-only claims and are skipped;
+``--match`` restricts the comparison (CI uses ``^fig13/model`` — the
+analytical-model rows are machine-independent, so the gate is deterministic
+on any runner).  Rows present on only one side are reported but do not
+fail: new benchmarks land before their baselines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+
+def load_rows(path: str) -> dict:
+    rows = json.loads(Path(path).read_text())
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed slowdown fraction (default 0.20 = +20%%)")
+    ap.add_argument("--match", default="",
+                    help="regex restricting which row names are compared")
+    args = ap.parse_args()
+
+    cur, base = load_rows(args.current), load_rows(args.baseline)
+    pat = re.compile(args.match) if args.match else None
+    compared = regressed = 0
+    for name in sorted(base):
+        if pat and not pat.search(name):
+            continue
+        if base[name] <= 0:
+            continue  # derived-only row: no timing to gate
+        if name not in cur:
+            print(f"MISSING {name} (in baseline, not in current run)")
+            continue
+        compared += 1
+        ratio = cur[name] / base[name]
+        if ratio > 1.0 + args.tolerance:
+            regressed += 1
+            print(f"REGRESSED {name}: {base[name]:.2f}us -> {cur[name]:.2f}us "
+                  f"(x{ratio:.2f} > x{1.0 + args.tolerance:.2f})")
+        else:
+            print(f"ok {name}: {base[name]:.2f}us -> {cur[name]:.2f}us (x{ratio:.2f})")
+    for name in sorted(set(cur) - set(base)):
+        if pat and not pat.search(name):
+            continue
+        print(f"NEW {name} (no baseline yet)")
+    if compared == 0:
+        print("error: no rows compared — check --match and the baseline file",
+              file=sys.stderr)
+        return 1
+    print(f"{compared} rows compared, {regressed} regressed "
+          f"(tolerance +{args.tolerance:.0%})")
+    return 1 if regressed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
