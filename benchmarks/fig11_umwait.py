@@ -21,7 +21,8 @@ Claims validated (paper Fig. 11 + "choose your wait scheme"):
 from __future__ import annotations
 
 import time
-from typing import List
+from pathlib import Path
+from typing import List, Optional
 
 from benchmarks.common import Row, words_for_bytes
 from repro.core import make_device
@@ -36,14 +37,23 @@ QUICK_DEPTHS = [8]
 QUICK_POLICIES = ["spin", "umwait", "interrupt"]
 
 
-def _measure(policy: str, size: int, depth: int) -> Row:
+def _measure(policy: str, size: int, depth: int,
+             trace_dir: Optional[str] = None) -> Row:
     device = make_device(wait_policy=policy)
     tel = Telemetry(device)
+    sampler = None  # reads monotonic counters, not records — no conflict
+    if trace_dir is not None:
+        from repro.obs import Sampler
+        sampler = Sampler(device)  # manual ticks: deterministic trace
     w = words_for_bytes(size)
     t0 = time.perf_counter()
     futs = [device.memcpy_async(w) for _ in range(depth)]
     device.wait_all(futs)
     wall = time.perf_counter() - t0
+    if sampler is not None:
+        sampler.tick()
+        sampler.to_csv(str(Path(trace_dir) /
+                           f"fig11_{policy}_ts{size}B_d{depth}.csv"))
     ws = tel.snapshot()["wait"][policy]
     return (
         f"fig11/ts{size}B/d{depth}/{policy}",
@@ -54,7 +64,7 @@ def _measure(policy: str, size: int, depth: int) -> Row:
     )
 
 
-def rows(quick: bool = False) -> List[Row]:
+def rows(quick: bool = False, trace_dir: Optional[str] = None) -> List[Row]:
     sizes = QUICK_SIZES if quick else SIZES
     depths = QUICK_DEPTHS if quick else DEPTHS
     policies = QUICK_POLICIES if quick else POLICIES
@@ -66,5 +76,5 @@ def rows(quick: bool = False) -> List[Row]:
     for size in sizes:
         for depth in depths:
             for policy in policies:
-                out.append(_measure(policy, size, depth))
+                out.append(_measure(policy, size, depth, trace_dir=trace_dir))
     return out

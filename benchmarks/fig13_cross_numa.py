@@ -18,7 +18,8 @@ Claims validated:
 from __future__ import annotations
 
 import time
-from typing import List
+from pathlib import Path
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +70,7 @@ def _model_rows(sizes) -> List[Row]:
     return out
 
 
-def _e2e_rows(quick: bool) -> List[Row]:
+def _e2e_rows(quick: bool, trace_dir: Optional[str] = None) -> List[Row]:
     """Measured: one 2-node fabric shared by the serving pipeline (requests
     admitted to their home node's engine group) and a NUMA-sharded KV pool
     whose swaps cross from the node-0 host tier to node-1 shards."""
@@ -82,13 +83,19 @@ def _e2e_rows(quick: bool) -> List[Row]:
     # telemetry opens BEFORE the measured work so link occupancy is
     # normalized over the window that actually carried the traffic
     telemetry = Telemetry(device)
+    sampler = None
+    if trace_dir is not None:
+        # live time series of the run: per-node traffic + per-stage serving
+        # gauges in one trace (the sampler reads monotonic counters, so it
+        # coexists with the record-walking Telemetry above)
+        sampler = device.observe(interval_s=0.05)
     out: List[Row] = []
 
     cfg = get_config("tinyllama-1.1b").reduced()
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.key(0))
     server = VhostStyleServer(model, params, slots=2, max_cache_len=64,
-                              device=device)
+                              device=device, observer=sampler)
     rng = np.random.default_rng(0)
     n_req = 3 if quick else 6
     for i in range(n_req):
@@ -115,6 +122,9 @@ def _e2e_rows(quick: bool) -> List[Row]:
                 f"cross_node_swaps={pool.stats.cross_node_swaps}"))
 
     device.drain()
+    if sampler is not None:
+        sampler.stop()
+        sampler.to_csv(str(Path(trace_dir) / "fig13_e2e.csv"))
     nodes = telemetry.snapshot()["nodes"]
     local_b = sum(n["local_bytes"] for n in nodes.values())
     cross_b = sum(n["cross_bytes"] for n in nodes.values())
@@ -126,7 +136,7 @@ def _e2e_rows(quick: bool) -> List[Row]:
     return out
 
 
-def rows(quick: bool = False) -> List[Row]:
+def rows(quick: bool = False, trace_dir: Optional[str] = None) -> List[Row]:
     out = _model_rows(QUICK_SIZES if quick else SIZES)
-    out.extend(_e2e_rows(quick))
+    out.extend(_e2e_rows(quick, trace_dir=trace_dir))
     return out

@@ -14,7 +14,8 @@ Measured: our engine runs all topologies for real via make_device(wq_configs).
 from __future__ import annotations
 
 import time
-from typing import List
+from pathlib import Path
+from typing import List, Optional
 
 import jax.numpy as jnp
 
@@ -113,7 +114,7 @@ def _qos_dedicated_vs_shared() -> List[Row]:
     return out
 
 
-def _qos_priority_sweep() -> List[Row]:
+def _qos_priority_sweep(trace_dir: Optional[str] = None) -> List[Row]:
     """Two WQs on one group, equal backlog, 1 PE: the higher-priority WQ is
     drained preferentially, so its descriptors see lower queueing delay."""
     src = jnp.zeros((SIZE // 512, 128), jnp.float32)
@@ -123,6 +124,10 @@ def _qos_priority_sweep() -> List[Row]:
             WQConfig("hi", size=32, priority=hi_pri),
             WQConfig("lo", size=32, priority=1),
         ], pes_per_group=1)
+        sampler = None
+        if trace_dir is not None:
+            from repro.obs import Sampler
+            sampler = Sampler(dev)  # manual ticks: deterministic trace
         dev.memcpy_async(src).wait()  # warm the jit cache off the clock
         # backlog both queues before any dispatch: park behind a promise so
         # the arbiter sees both WQs full when the fence releases
@@ -131,6 +136,10 @@ def _qos_priority_sweep() -> List[Row]:
                 for _ in range(8) for w in ("hi", "lo")]
         gate.set_result()
         dev.drain()
+        if sampler is not None:
+            sampler.tick()
+            sampler.to_csv(str(Path(trace_dir) /
+                               f"fig9_priority{hi_pri}_vs_1.csv"))
         assert all(f.status == Status.SUCCESS for f in futs)
         by_wq = {"hi": [], "lo": []}
         for f in futs:  # per-future attribution excludes the warmup copy
@@ -143,5 +152,6 @@ def _qos_priority_sweep() -> List[Row]:
     return out
 
 
-def rows() -> List[Row]:
-    return _modeled() + _measured() + _qos_dedicated_vs_shared() + _qos_priority_sweep()
+def rows(trace_dir: Optional[str] = None) -> List[Row]:
+    return (_modeled() + _measured() + _qos_dedicated_vs_shared()
+            + _qos_priority_sweep(trace_dir=trace_dir))

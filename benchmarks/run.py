@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig16] \
-        [--quick] [--json BENCH.json]
+        [--quick] [--json BENCH.json] [--trace DIR]
 
 Prints ``name,us_per_call,derived`` CSV rows and writes
 results/bench/bench.json (``--json PATH`` writes the same machine-readable
@@ -49,6 +49,9 @@ def main() -> int:
                     help="reduced sweeps for modules whose rows() takes quick=")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the machine-readable rows to PATH")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="modules whose rows() takes trace_dir= attach an "
+                         "obs.Sampler and drop per-run time-series CSVs here")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
@@ -62,8 +65,11 @@ def main() -> int:
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         try:
             kwargs = {}
-            if args.quick and "quick" in inspect.signature(mod.rows).parameters:
+            params = inspect.signature(mod.rows).parameters
+            if args.quick and "quick" in params:
                 kwargs["quick"] = True
+            if args.trace and "trace_dir" in params:
+                kwargs["trace_dir"] = args.trace
             rows = mod.rows(**kwargs)
         except Exception as e:  # noqa: BLE001 — report, fail the run at exit
             print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}", flush=True)

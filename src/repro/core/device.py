@@ -493,6 +493,10 @@ class Device:
         )
         self._sinks: List[Any] = []  # registered CompletionSets
         self._sinks_lock = threading.Lock()
+        # attached observability samplers (repro.obs): registered on
+        # Sampler.start(), detached on stop(), so shutdown paths can find
+        # and stop any live background sampler threads
+        self._observers: List[Any] = []
         # engine notifications arrive while _engine_lock is held; user
         # callbacks must NOT run under it (a blocking callback would
         # deadlock against other waiters), so notifications queue here and
@@ -610,6 +614,38 @@ class Device:
             any(w.name == name for g in e.config.groups for w in g.wqs)
             for e in self.engines
         )
+
+    # ------------------------------------------------------------------ observability
+    def attach_observer(self, observer: Any) -> None:
+        """Register a live observer (a ``repro.obs.Sampler``); idempotent.
+        Observers are plain registrations — the device never calls into
+        them, but ``observers`` lets shutdown code stop stray samplers."""
+        if observer not in self._observers:
+            self._observers.append(observer)
+
+    def detach_observer(self, observer: Any) -> None:
+        try:
+            self._observers.remove(observer)
+        except ValueError:
+            pass
+
+    @property
+    def observers(self) -> List[Any]:
+        return list(self._observers)
+
+    def observe(self, interval_s: float = 0.05, **kw) -> Any:
+        """Convenience: build a ``repro.obs.Sampler`` over this device and
+        start its background sampling thread.  Caller owns stop():
+
+            sampler = device.observe(interval_s=0.01)
+            ... workload ...
+            sampler.stop(); print(sampler.to_csv())
+        """
+        from repro.obs import Sampler  # lazy: obs imports core
+
+        sampler = Sampler(self, interval_s=interval_s, **kw)
+        sampler.start()
+        return sampler
 
     # ------------------------------------------------------------------ completion
     def _resolve_wait_policy(self, policy: Union[str, WaitPolicy, None]) -> WaitPolicy:

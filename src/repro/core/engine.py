@@ -220,6 +220,18 @@ class StreamEngine:
             g.name: {w.name: 0.0 for w in g.wqs} for g in self.config.groups
         }
         self.records: Dict[int, CompletionRecord] = {}
+        # cheap monotonic counters, bumped once per resolved record in
+        # _notify: the repro.obs sampler reads deltas of these each tick —
+        # O(engines) per sample — instead of rescanning ``records``.
+        # ``completed`` counts every resolution (including errors and failed
+        # fences), matching what a record-walking Telemetry counts.
+        self.counters: Dict[str, float] = {
+            "completed": 0, "errors": 0, "bytes": 0,
+            "modeled_us": 0.0, "wall_us": 0.0,
+            "local_ops": 0, "local_bytes": 0,
+            "cross_ops": 0, "cross_bytes": 0, "link_bytes": 0,
+        }
+        self._counters_lock = threading.Lock()
         # deferred submissions waiting on dependency fences:
         # (desc, group, wq, producer, deps, record)
         self._deferred: List[Tuple[Submittable, int, int, Optional[str], List[Any], CompletionRecord]] = []
@@ -236,8 +248,34 @@ class StreamEngine:
         self._listeners.append(fn)
 
     def _notify(self, rec: CompletionRecord) -> None:
+        self._count(rec)
         for fn in self._listeners:
             fn(rec)
+
+    def _count(self, rec: CompletionRecord) -> None:
+        """Fold one resolved record into the monotonic counters (every
+        resolve path funnels through _notify, so each record counts once)."""
+        with self._counters_lock:
+            c = self.counters
+            c["completed"] += 1
+            if rec.status == Status.ERROR:
+                c["errors"] += 1
+            c["bytes"] += rec.bytes_processed
+            c["modeled_us"] += rec.modeled_time_us
+            c["wall_us"] += rec.wall_time_us
+            if rec.link_hops > 0:
+                c["cross_ops"] += 1
+                c["cross_bytes"] += rec.bytes_processed
+                c["link_bytes"] += rec.bytes_processed * rec.link_hops
+            else:
+                c["local_ops"] += 1
+                c["local_bytes"] += rec.bytes_processed
+
+    def counters_snapshot(self) -> Dict[str, float]:
+        """Point-in-time copy of the monotonic counters (delta-sampling
+        safe: values never decrease)."""
+        with self._counters_lock:
+            return dict(self.counters)
 
     def _retire(self, slot: "_PESlot") -> bool:
         """try_retire + completion notification (the IRQ/monitored-write

@@ -87,8 +87,11 @@ class WorkQueue:
         self.traffic_class = traffic_class
         self._q: Deque[Tuple[Submittable, float]] = collections.deque()
         self._lock = threading.Lock()
+        # monotonic counters — the obs sampler reads deltas of these per
+        # tick, so they only ever grow (bytes_submitted tracks descriptor
+        # payload accepted into the queue, the WQ-inflow analogue)
         self.stats = {"submitted": 0, "retried": 0, "dispatched": 0,
-                      "queue_delay_us": 0.0}
+                      "queue_delay_us": 0.0, "bytes_submitted": 0}
         # queueing delay of the most recent pop(); the engine reads this to
         # stamp the descriptor's CompletionRecord
         self.last_queue_delay_us: float = 0.0
@@ -122,6 +125,7 @@ class WorkQueue:
                 return Status.RETRY
             self._q.append((desc, now))
             self.stats["submitted"] += 1
+            self.stats["bytes_submitted"] += desc.nbytes
             return Status.PENDING
         # shared: atomic non-posted enqueue with RETRY status
         with self._lock:
@@ -130,6 +134,7 @@ class WorkQueue:
                 return Status.RETRY
             self._q.append((desc, now))
             self.stats["submitted"] += 1
+            self.stats["bytes_submitted"] += desc.nbytes
             return Status.PENDING
 
     def pop(self) -> Optional[Submittable]:

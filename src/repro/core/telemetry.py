@@ -2,32 +2,44 @@
 telemetry functionalities are provided by the PCM library ... inbound-
 outbound traffic and request count on each DSA instance").
 
+This module is the ROLLUP half: ``snapshot()`` aggregates counters into the
+per-engine / per-WQ / per-NUMA-node dict the benchmarks read, and
+``report()`` renders the PCM-style table.  The per-record accumulation
+lives in core/counters.py (``CounterStore``), shared with the live
+``repro.obs`` sampler — which is the right tool when you need a TIME
+SERIES instead of end-of-run sums (see docs/observability.md).
+
 Counters per engine instance: per-op x size-class counts/bytes/latency, WQ
 occupancy samples, retry totals.  When attached to a ``Device``, the
 snapshot also attributes submissions per policy decision (which instance
 the SubmitPolicy routed each op to, plus backoff pressure) and reports the
 completion-wait accounting per WaitPolicy — host-busy vs host-free cycles,
 wakes, IRQs, and the measured host-free fraction (the paper's Fig. 11
-"umwait fraction", measured instead of assumed).  ``report()`` renders the
-PCM-style table; ``snapshot()`` returns a dict for programmatic use.
+"umwait fraction", measured instead of assumed).
+
+Memory: ``sample()`` consumes completion records — each resolved record is
+counted once and pruned from the engine's ``records`` dict, so telemetry
+over a long-running serving loop stays O(in-flight), not O(ops ever
+submitted).  Attach ONE record-walking consumer per engine set (a
+``Telemetry``, or the ``repro.obs.Sampler`` which reads the engines'
+monotonic counters instead and composes fine with one Telemetry); a second
+record-walker would miss records the first one pruned — build it with
+``prune=False`` if you really need two.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
 from typing import List, Optional, Union
 
+from repro.core.counters import CounterStore, OpCounter, size_bucket
 from repro.core.device import Device
 from repro.core.engine import StreamEngine
 
+# backwards-compatible aliases (pre-split spellings)
+_size_bucket = size_bucket
 
-@dataclasses.dataclass
-class OpCounter:
-    count: int = 0
-    bytes: int = 0
-    modeled_us: float = 0.0
-    wall_us: float = 0.0
+__all__ = ["Telemetry", "OpCounter", "size_bucket"]
 
 
 class Telemetry:
@@ -35,7 +47,7 @@ class Telemetry:
     taken on poll()/sample()."""
 
     def __init__(self, engines: Union["Device", List[StreamEngine], None] = None,
-                 device: Optional["Device"] = None):
+                 device: Optional["Device"] = None, prune: bool = True):
         if device is None and engines is not None and hasattr(engines, "engines"):
             device = engines  # Telemetry(device) convenience form
         if device is not None:
@@ -44,7 +56,7 @@ class Telemetry:
         else:
             self.device = None
             self.engines = list(engines or [])
-        self.ops = {e.name: defaultdict(OpCounter) for e in self.engines}
+        self.store = CounterStore((e.name for e in self.engines), prune=prune)
         self.wq_samples = {e.name: [] for e in self.engines}
         # per-WQ rollups: occupancy samples and completion latency, keyed by
         # WQ name within each engine (Fig. 9 queueing-delay attribution)
@@ -52,17 +64,21 @@ class Telemetry:
             e.name: {w.name: [] for g in e.config.groups for w in g.wqs}
             for e in self.engines
         }
-        self.per_wq_ops = {e.name: defaultdict(OpCounter) for e in self.engines}
-        # per-NUMA-node traffic split (paper §4 / Fig. 13): bytes whose
-        # transfer stayed on the servicing engine's node vs. bytes charged
-        # inter-node link crossings; link_bytes weights by hop count (a
-        # double-remote transfer loads the link twice)
-        self.node_traffic: dict = defaultdict(
-            lambda: {"local_ops": 0, "local_bytes": 0,
-                     "cross_ops": 0, "cross_bytes": 0, "link_bytes": 0}
-        )
-        self._seen: set = set()
         self.t0 = time.perf_counter()
+
+    # counter views (same live dicts the store accumulates into), kept for
+    # the pre-split attribute spellings
+    @property
+    def ops(self):
+        return self.store.ops
+
+    @property
+    def per_wq_ops(self):
+        return self.store.per_wq_ops
+
+    @property
+    def node_traffic(self):
+        return self.store.node_traffic
 
     def sample(self):
         for e in self.engines:
@@ -71,31 +87,7 @@ class Telemetry:
             for g in e.config.groups:
                 for w in g.wqs:
                     self.per_wq_samples[e.name][w.name].append(w.occupancy)
-            for desc_id, rec in list(e.records.items()):
-                if desc_id in self._seen or not rec.is_done():
-                    continue
-                self._seen.add(desc_id)
-                # the record carries its op type; bucket per op x size class
-                key = f"{rec.op or '?'}/{_size_bucket(rec.bytes_processed)}"
-                c = self.ops[e.name][key]
-                c.count += 1
-                c.bytes += rec.bytes_processed
-                c.modeled_us += rec.modeled_time_us
-                c.wall_us += rec.wall_time_us
-                nt = self.node_traffic[getattr(e, "node_id", 0)]
-                if rec.link_hops > 0:
-                    nt["cross_ops"] += 1
-                    nt["cross_bytes"] += rec.bytes_processed
-                    nt["link_bytes"] += rec.bytes_processed * rec.link_hops
-                else:
-                    nt["local_ops"] += 1
-                    nt["local_bytes"] += rec.bytes_processed
-                if rec.wq is not None:
-                    wc = self.per_wq_ops[e.name][rec.wq]
-                    wc.count += 1
-                    wc.bytes += rec.bytes_processed
-                    wc.modeled_us += rec.modeled_time_us
-                    wc.wall_us += rec.wall_time_us
+            self.store.drain_engine(e)
 
     def snapshot(self) -> dict:
         self.sample()
@@ -108,7 +100,7 @@ class Telemetry:
             for g in e.config.groups:
                 for w in g.wqs:
                     occ = self.per_wq_samples[e.name][w.name]
-                    comp = self.per_wq_ops[e.name].get(w.name, OpCounter())
+                    comp = self.store.per_wq_ops[e.name].get(w.name, OpCounter())
                     wq_rollup[w.name] = {
                         "mode": w.mode,
                         "priority": w.priority,
@@ -129,7 +121,8 @@ class Telemetry:
                 "mean_wq_occupancy": sum(samples) / max(len(samples), 1),
                 "wqs": wq_rollup,
                 "ops": {
-                    k: dataclasses.asdict(v) for k, v in sorted(self.ops[e.name].items())
+                    k: dataclasses.asdict(v)
+                    for k, v in sorted(self.store.ops[e.name].items())
                 },
             }
         # per-node rollup: engines grouped by NUMA node, local vs cross-node
@@ -146,7 +139,7 @@ class Telemetry:
         elapsed = max(out["elapsed_s"], 1e-12)
         out["nodes"] = {}
         for nid in sorted({getattr(e, "node_id", 0) for e in self.engines}):
-            nt = dict(self.node_traffic.get(nid) or
+            nt = dict(self.store.node_traffic.get(nid) or
                       {"local_ops": 0, "local_bytes": 0, "cross_ops": 0,
                        "cross_bytes": 0, "link_bytes": 0})
             nt["engines"] = [e.name for e in self.engines
@@ -218,13 +211,3 @@ class Telemetry:
                 f"(modeled wake/irq overhead {w['modeled_overhead_s']*1e6:.1f}us)"
             )
         return "\n".join(lines)
-
-
-def _size_bucket(nbytes: int) -> str:
-    if nbytes < 4096:
-        return "<4KB"
-    if nbytes < 65536:
-        return "4-64KB"
-    if nbytes < 1 << 20:
-        return "64KB-1MB"
-    return ">=1MB"

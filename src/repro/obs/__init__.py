@@ -1,0 +1,16 @@
+"""Live observability over the streaming-engine fabric (paper §5).
+
+``Telemetry`` (core/telemetry.py) answers "what happened" after a run;
+this package answers "what is happening" while it runs — the pcm-accel
+analogue.  A ``Sampler`` snapshots every engine / WQ / NUMA node / wait
+policy at a fixed interval into bounded ring-buffer ``Series`` (delta
+sampling over monotonic counters, O(engines) per tick) with CSV/JSONL
+export and windowed percentile summaries; ``tools/pcm_repro.py`` renders
+the live terminal view.  See docs/observability.md for the metric
+glossary and lifecycle.
+"""
+from repro.obs.export import to_csv, to_jsonl
+from repro.obs.sampler import Sampler
+from repro.obs.series import Series, percentile
+
+__all__ = ["Sampler", "Series", "percentile", "to_csv", "to_jsonl"]

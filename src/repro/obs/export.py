@@ -1,0 +1,54 @@
+"""Sampler exporters: CSV / JSONL time series, pcm-accel style.
+
+Both formats are one record per tick.  CSV is wide-form — one column per
+metric, mirroring ``pcm-accel -csv`` — with the column set fixed at export
+time (metrics that appear mid-run backfill earlier rows with empty cells).
+JSONL writes each tick's row as one JSON object, which round-trips ragged
+rows exactly.
+"""
+from __future__ import annotations
+
+import csv as _csv
+import io
+import json
+from pathlib import Path
+from typing import Optional
+
+
+def to_csv(sampler, path: Optional[str] = None) -> str:
+    """Render the sampler's buffered ticks as CSV; optionally also write
+    the text to ``path``.  Returns the CSV text."""
+    rows = sampler.rows()
+    columns = sampler.columns()
+    buf = io.StringIO()
+    writer = _csv.DictWriter(buf, fieldnames=columns, restval="",
+                             extrasaction="ignore", lineterminator="\n")
+    writer.writeheader()
+    for row in rows:
+        writer.writerow({k: _fmt(v) for k, v in row.items()})
+    text = buf.getvalue()
+    if path is not None:
+        Path(path).parent.mkdir(parents=True, exist_ok=True)
+        Path(path).write_text(text)
+    return text
+
+
+def to_jsonl(sampler, path: Optional[str] = None) -> str:
+    """Render the buffered ticks as JSON Lines (one object per tick);
+    optionally also write to ``path``.  Returns the JSONL text."""
+    lines = [json.dumps(row, sort_keys=True) for row in sampler.rows()]
+    text = "\n".join(lines) + ("\n" if lines else "")
+    if path is not None:
+        Path(path).parent.mkdir(parents=True, exist_ok=True)
+        Path(path).write_text(text)
+    return text
+
+
+def _fmt(v) -> str:
+    """Compact numeric cells: integers stay integral, floats keep enough
+    digits to reconcile byte counts exactly."""
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    if isinstance(v, float):
+        return f"{v:.9g}"
+    return str(v)

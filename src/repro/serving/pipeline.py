@@ -91,7 +91,7 @@ class VhostStyleServer:
 
     def __init__(self, model, params, *, slots: int = 4, max_cache_len: int = 256,
                  device: Optional[Device] = None, burst: int = 32,
-                 topology=None):
+                 topology=None, observer=None):
         from repro.launch.steps import make_decode_step, make_prefill_step
 
         self.model = model
@@ -130,6 +130,10 @@ class VhostStyleServer:
         self.metrics = {"decoded_tokens": 0, "admitted": 0, "completed": 0,
                         "copy_bursts": 0, "steps": 0,
                         "admitted_by_node": {}}
+        # anything with .gauge(name, value) — normally an obs.Sampler; each
+        # step() emits per-stage wall times and occupancy gauges so the
+        # serving loop shows up in the same time series as the engines
+        self.observer = observer
 
     # ------------------------------------------------------------------ API
     def enqueue(self, req: Request):
@@ -220,11 +224,24 @@ class VhostStyleServer:
         # can make progress, park on the head copy under the device's wait
         # policy instead of spinning the loop.
         can_submit = bool(self.queue) and bool(self._free_slots)
+        t0 = time.perf_counter()
         self._stage_poll_commit(block=not self.active and not can_submit
                                 and len(self.reorder) > 0)
+        t1 = time.perf_counter()
         self._stage_submit_copies() # (2) batch descriptors for new requests
+        t2 = time.perf_counter()
         self._stage_decode()        # (3) compute overlapped with copies
+        t3 = time.perf_counter()
         self.metrics["steps"] += 1
+        if self.observer is not None:
+            obs = self.observer
+            obs.gauge("serving.queue_depth", len(self.queue))
+            obs.gauge("serving.active_slots", len(self.active))
+            obs.gauge("serving.slot_occupancy", len(self.active) / self.slots)
+            obs.gauge("serving.inflight_copies", len(self.reorder))
+            obs.gauge("serving.stage.poll_us", (t1 - t0) * 1e6)
+            obs.gauge("serving.stage.submit_us", (t2 - t1) * 1e6)
+            obs.gauge("serving.stage.decode_us", (t3 - t2) * 1e6)
 
     def run_until_drained(self, max_steps: int = 10_000):
         steps = 0

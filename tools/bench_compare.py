@@ -1,7 +1,7 @@
 """Regression gate over benchmark JSON rows.
 
     python tools/bench_compare.py CURRENT.json BASELINE.json \
-        [--tolerance 0.20] [--match REGEX]
+        [--tolerance 0.20] [--match REGEX] [--require REGEX ...]
 
 Compares ``us_per_call`` per row name and exits 1 when any compared row is
 more than ``tolerance`` slower than the committed baseline (default 20%).
@@ -10,11 +10,19 @@ Rows with ``us_per_call <= 0`` carry derived-only claims and are skipped;
 analytical-model rows are machine-independent, so the gate is deterministic
 on any runner).  Rows present on only one side are reported but do not
 fail: new benchmarks land before their baselines.
+
+``--require REGEX`` (repeatable) is a PRESENCE gate for rows whose timings
+are machine-dependent and therefore can't be value-compared: the current
+run must contain at least one row matching each pattern, with a finite
+non-negative ``us_per_call``.  CI uses ``--require '^fig11/'`` so the wait
+sweep silently vanishing (module error, rename) fails the build even
+though its wall times aren't gated.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import re
 import sys
 from pathlib import Path
@@ -33,6 +41,9 @@ def main() -> int:
                     help="allowed slowdown fraction (default 0.20 = +20%%)")
     ap.add_argument("--match", default="",
                     help="regex restricting which row names are compared")
+    ap.add_argument("--require", action="append", default=[], metavar="REGEX",
+                    help="current run must contain >=1 row matching REGEX "
+                         "with a finite us_per_call >= 0 (repeatable)")
     args = ap.parse_args()
 
     cur, base = load_rows(args.current), load_rows(args.baseline)
@@ -58,13 +69,24 @@ def main() -> int:
         if pat and not pat.search(name):
             continue
         print(f"NEW {name} (no baseline yet)")
+    missing_required = 0
+    for req in args.require:
+        rp = re.compile(req)
+        hits = [n for n, us in cur.items()
+                if rp.search(n) and us >= 0 and math.isfinite(us)]
+        if hits:
+            print(f"required {req!r}: {len(hits)} row(s) present")
+        else:
+            missing_required += 1
+            print(f"MISSING-REQUIRED {req!r}: no valid row in current run",
+                  file=sys.stderr)
     if compared == 0:
         print("error: no rows compared — check --match and the baseline file",
               file=sys.stderr)
         return 1
     print(f"{compared} rows compared, {regressed} regressed "
           f"(tolerance +{args.tolerance:.0%})")
-    return 1 if regressed else 0
+    return 1 if regressed or missing_required else 0
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ should use a different fence language (```bash, ```text, ...).
 from __future__ import annotations
 
 import re
+import subprocess
 import sys
 import traceback
 from pathlib import Path
@@ -18,6 +19,37 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 # match ```python / ```py fences, tolerating info strings and CRLF endings
 BLOCK_RE = re.compile(r"```py(?:thon)?[^\n]*\r?\n(.*?)```", re.DOTALL)
+#: bytecode artifacts that must never be committed — directories or files
+BYTECODE_RE = re.compile(r"(^|/)__pycache__(/|$)|\.py[cod]$")
+
+
+def check_bytecode() -> int:
+    """Fail when bytecode artifacts are GIT-TRACKED.  Deliberately scoped to
+    ``git ls-files`` (not the working tree): running the test suite or this
+    very script compiles ``__pycache__`` locally, so an on-disk scan would
+    always fail — only committed artifacts are the defect.  Also verifies
+    .gitignore actually covers them, so they cannot sneak back in via
+    ``git add .``."""
+    try:
+        tracked = subprocess.run(
+            ["git", "ls-files"], cwd=ROOT, check=True,
+            capture_output=True, text=True).stdout.splitlines()
+    except (OSError, subprocess.CalledProcessError) as e:
+        print(f"note bytecode check skipped (git unavailable: {e})")
+        return 0
+    bad = [f for f in tracked if BYTECODE_RE.search(f)]
+    for f in bad:
+        print(f"FAIL tracked bytecode artifact: {f}", file=sys.stderr)
+    ignored = subprocess.run(
+        ["git", "check-ignore", "-q", "src/__pycache__/x.cpython-310.pyc"],
+        cwd=ROOT).returncode == 0
+    if not ignored:
+        print("FAIL .gitignore does not cover __pycache__/*.pyc",
+              file=sys.stderr)
+    if bad or not ignored:
+        return len(bad) + (0 if ignored else 1)
+    print("ok   no tracked bytecode artifacts; .gitignore covers them")
+    return 0
 
 
 def doc_files() -> list[Path]:
@@ -48,11 +80,12 @@ def check_file(path: Path) -> int:
 
 
 def main() -> int:
+    failures = check_bytecode()  # repo hygiene first: cheap and unambiguous
     files = doc_files()
     if not files:
         print("no documentation files found", file=sys.stderr)
         return 1
-    failures = sum(check_file(f) for f in files)
+    failures += sum(check_file(f) for f in files)
     if failures:
         print(f"{failures} documentation code block(s) failed", file=sys.stderr)
         return 1
