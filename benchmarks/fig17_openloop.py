@@ -1,0 +1,149 @@
+"""Fig. 17 (extension of the §6 case study): open-loop sustained arrival.
+
+The paper benchmarks the Vhost datapath under sustained packet arrival —
+traffic keeps coming whether or not the server keeps up — where DSA's win
+is that offload holds latency while the host would have collapsed.  This
+module drives the VhostStyleServer the same way: a seeded open-loop
+``TrafficGenerator`` on the virtual clock, SLO classes mapped onto the
+priority WQs, and the ``AdmissionController`` shedding at watermarks /
+``QueueFull`` backpressure.  The decode slot runs the NullDecoder (the null
+PMD analogue) so rows measure the datapath, not model FLOPs.
+
+Claims validated:
+  * graceful overload — at 2x offered load, goodput degrades gently (stays
+    within a factor of the 1x goodput) instead of collapsing toward zero;
+    the excess is SHED, visibly, not silently queued into latency heat
+    death (``fig17/claim/graceful_overload``);
+  * SLO isolation — the latency class's p99 stays strictly below bulk's
+    under overload: priority admission + the high-priority DWQ + shed-first
+    bulk (``fig17/claim/slo_isolation``);
+  * burstiness costs tail, not goodput — MMPP traffic at the same mean
+    rate keeps throughput but fattens p99 vs Poisson.
+
+Row value (``us_per_call``) is the latency-class p99 end-to-end latency in
+VIRTUAL microseconds — deterministic enough to eyeball across runs, but
+machine-load dependent at the margin, so CI gates these rows by PRESENCE
+(``--require '^fig17/'``), not value.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional
+
+from benchmarks.common import Row
+
+#: virtual-clock step; capacity below derives from it
+STEP_S = 0.02
+
+
+def _make_server(sampler=None):
+    from repro.serving.kv_pool import PagedKVPool
+    from repro.serving.nullmodel import NullDecoder
+    from repro.serving.pipeline import VhostStyleServer
+    from repro.serving.slo import (
+        DEFAULT_SLO_CLASSES,
+        AdmissionController,
+        LatencyTracker,
+    )
+
+    pool = PagedKVPool(n_device_pages=64, n_host_pages=4,
+                       page_tokens=32, kv_dim=8)
+    server = VhostStyleServer(
+        NullDecoder(64), {}, slots=4, max_cache_len=128, kv_pool=pool,
+        admission=AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=24),
+        tracker=LatencyTracker(DEFAULT_SLO_CLASSES),
+        observer=sampler,
+    )
+    return server
+
+
+def _traffic(arrivals):
+    from repro.serving.traffic import TrafficGenerator, ZipfLengths
+
+    return TrafficGenerator(
+        arrivals,
+        prompt_lengths=ZipfLengths(s=1.2, lo=8, hi=64),
+        output_lengths=ZipfLengths(s=1.2, lo=2, hi=16),
+        class_mix={"latency": 0.25, "bulk": 0.75},
+        seed=7,
+    )
+
+
+def _capacity_rps() -> float:
+    """Analytic service capacity: ``slots`` requests in flight, each costing
+    ~(mean output tokens + admission overhead) virtual steps."""
+    from repro.serving.traffic import ZipfLengths
+
+    mean_steps = ZipfLengths(s=1.2, lo=2, hi=16).mean() + 2.0
+    return 4 / (mean_steps * STEP_S)
+
+
+def _run(arrivals, horizon_s: float, label: str,
+         trace_dir: Optional[str] = None) -> dict:
+    server = _make_server()
+    sampler = None
+    if trace_dir is not None:
+        from repro.obs import Sampler
+
+        sampler = Sampler(server.device)  # manual ticks: deterministic trace
+        server.observer = sampler
+    report = server.run_open_loop(_traffic(arrivals), horizon_s,
+                                  step_s=STEP_S, vocab_size=64)
+    if sampler is not None:
+        sampler.tick()
+        sampler.to_csv(str(Path(trace_dir) / f"fig17_{label}.csv"))
+    return report
+
+
+def rows(quick: bool = False, trace_dir: Optional[str] = None) -> List[Row]:
+    from repro.serving.traffic import BurstyArrivals, PoissonArrivals
+
+    cap = _capacity_rps()
+    horizon = 4.0 if quick else 10.0
+    out: List[Row] = []
+    reports = {}
+    for x in (0.5, 1.0, 2.0):
+        r = _run(PoissonArrivals(x * cap, seed=int(10 * x)), horizon,
+                 f"poisson_{x:g}x", trace_dir=trace_dir)
+        reports[x] = r
+        lat = r["latency"]["latency"]
+        bulk = r["latency"]["bulk"]
+        out.append((
+            f"fig17/poisson/{x:g}x",
+            lat["p99_s"] * 1e6,  # latency-class virtual p99 in us
+            f"offered={r['offered_rps']:.1f}rps sustained={r['sustained_rps']:.1f}rps "
+            f"goodput={r['goodput_rps']:.1f}rps shed={r['shed']} "
+            f"lat_p99={lat['p99_s']*1e3:.0f}ms bulk_p99={bulk['p99_s']*1e3:.0f}ms",
+        ))
+    if not quick:
+        r = _run(BurstyArrivals(on_rps=2.0 * cap, off_rps=0.0,
+                                mean_on_s=0.5, mean_off_s=0.5, seed=23),
+                 horizon, "bursty_1x", trace_dir=trace_dir)
+        lat = r["latency"]["latency"]
+        out.append((
+            "fig17/bursty/1x_mean",
+            lat["p99_s"] * 1e6,
+            f"offered={r['offered_rps']:.1f}rps sustained={r['sustained_rps']:.1f}rps "
+            f"goodput={r['goodput_rps']:.1f}rps shed={r['shed']}",
+        ))
+
+    # -- claims -------------------------------------------------------------
+    g1, g2 = reports[1.0]["goodput_rps"], reports[2.0]["goodput_rps"]
+    graceful = g2 >= 0.5 * g1 and reports[2.0]["shed"] > 0
+    out.append((
+        "fig17/claim/graceful_overload", 0.0,
+        f"goodput@2x={g2:.1f}rps vs @1x={g1:.1f}rps (>=50% kept: {graceful}) "
+        f"shed@2x={reports[2.0]['shed']} in_flight=0",
+    ))
+    lat99 = reports[2.0]["latency"]["latency"]["p99_s"]
+    bulk99 = reports[2.0]["latency"]["bulk"]["p99_s"]
+    out.append((
+        "fig17/claim/slo_isolation", 0.0,
+        f"latency_p99={lat99*1e3:.0f}ms < bulk_p99={bulk99*1e3:.0f}ms "
+        f"under 2x overload: {lat99 < bulk99}",
+    ))
+    if not graceful or not lat99 < bulk99:
+        raise AssertionError(
+            f"fig17 claims failed: graceful={graceful} "
+            f"slo_isolation={lat99 < bulk99}")
+    return out

@@ -37,6 +37,7 @@ MODULES = [
     "fig13_cross_numa",
     "fig14_ts_bs",
     "fig16_vhost",
+    "fig17_openloop",
     "appendix_checkpoint",
 ]
 

@@ -502,6 +502,10 @@ class Device:
         # deadlock against other waiters), so notifications queue here and
         # dispatch after the lock is released
         self._done_notifications: "deque[Future]" = deque()
+        # SLO hint table (register_slo_classes): slo= submits resolve their
+        # wq/priority defaults from here, keeping the class -> WQ mapping in
+        # one place instead of at every call site
+        self._slo_classes: Dict[str, Any] = {}
         for e in self.engines:
             e.add_listener(self._on_record_done)
 
@@ -549,12 +553,41 @@ class Device:
                 desc.dst_node = _dominant_node(
                     [d.dst_node for d in members], node_hint)
 
+    # ------------------------------------------------------------------ SLO hints
+    def register_slo_classes(self, classes: Sequence[Any]) -> None:
+        """Register SLO classes (objects with ``name``/``wq``/``priority``,
+        e.g. ``repro.serving.slo.SLOClass``) so submissions can carry a
+        ``slo=`` hint instead of repeating the class -> WQ mapping at every
+        call site.  Re-registering replaces the table."""
+        table: Dict[str, Any] = {}
+        for c in classes:
+            table[c.name] = c
+        self._slo_classes = table
+
+    def occupancy(self, wq: Union[str, None] = None,
+                  node: Optional[int] = None) -> Optional[float]:
+        """Aggregate WQ occupancy probe — the admission controller's view
+        of engine-side pressure.  Averages ``len/size`` over the matching
+        WQs: ``wq`` restricts to that WQ name, ``node`` to that node's
+        engines; None when nothing matches (an unknown name is not 'idle')."""
+        occs: List[float] = []
+        engines = (self.engines if node is None else self.engines_on(node))
+        for e in engines:
+            for g in e.config.groups:
+                for w in g.wqs:
+                    if wq is None or w.name == wq:
+                        occs.append(w.occupancy)
+        if not occs:
+            return None
+        return sum(occs) / len(occs)
+
     # ------------------------------------------------------------------ submit
     def submit(self, desc: Submittable, *, after: Optional[Sequence[Any]] = None,
                group: Optional[int] = None, wq: Union[int, str, None] = None,
                priority: Optional[int] = None,
                producer: Optional[str] = None,
-               node: Optional[int] = None) -> Future:
+               node: Optional[int] = None,
+               slo: Optional[str] = None) -> Future:
         """Submit one descriptor; returns its Future.
 
         ``after``: Futures / CompletionRecords this descriptor must not
@@ -567,8 +600,22 @@ class Device:
         ``node``: home-node hint for operands the registry doesn't know —
         the ``numa_local`` policy places the submission there and the
         engine charges the link if placement lands elsewhere.
+        ``slo``: a registered SLO class name (register_slo_classes); fills
+        in ``wq``/``priority`` defaults from the class when the caller
+        didn't pass them explicitly.
         Raises QueueFull when the target WQ stays full through every
         backoff attempt."""
+        if slo is not None:
+            cls = self._slo_classes.get(slo)
+            if cls is None:
+                raise KeyError(f"unregistered SLO class {slo!r}; call "
+                               f"register_slo_classes first "
+                               f"(have {sorted(self._slo_classes)})")
+            cls_wq = getattr(cls, "wq", None)
+            if wq is None and cls_wq is not None and self.has_wq(cls_wq):
+                wq = cls_wq
+            if priority is None and wq is None:
+                priority = getattr(cls, "priority", None)
         self._stamp_locality(desc, node)
         eng = self.policy.select(self.engines, desc, producer)
         deps = list(after) if after is not None else None

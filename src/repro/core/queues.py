@@ -109,6 +109,13 @@ class WorkQueue:
         return len(self._q) / self.size
 
     @property
+    def headroom(self) -> int:
+        """Free entries — the occupancy probe's admission view: an arrival
+        whose class WQ has no headroom is better shed at the door than
+        bounced off ENQCMD RETRY after burning backoff."""
+        return max(self.size - len(self._q), 0)
+
+    @property
     def mean_queue_delay_us(self) -> float:
         return self.stats["queue_delay_us"] / max(self.stats["dispatched"], 1)
 

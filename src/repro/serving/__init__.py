@@ -1,4 +1,37 @@
 from repro.serving.kv_pool import PagedKVPool
-from repro.serving.pipeline import Request, VhostStyleServer
+from repro.serving.nullmodel import NullDecoder
+from repro.serving.pipeline import ReorderArray, Request, VhostStyleServer
+from repro.serving.slo import (
+    DEFAULT_SLO_CLASSES,
+    AdmissionController,
+    LatencyTracker,
+    SLOClass,
+)
+from repro.serving.traffic import (
+    ArrivalProcess,
+    BurstyArrivals,
+    DiurnalArrivals,
+    OpenRequest,
+    PoissonArrivals,
+    TrafficGenerator,
+    ZipfLengths,
+)
 
-__all__ = ["PagedKVPool", "Request", "VhostStyleServer"]
+__all__ = [
+    "AdmissionController",
+    "ArrivalProcess",
+    "BurstyArrivals",
+    "DEFAULT_SLO_CLASSES",
+    "DiurnalArrivals",
+    "LatencyTracker",
+    "NullDecoder",
+    "OpenRequest",
+    "PagedKVPool",
+    "PoissonArrivals",
+    "ReorderArray",
+    "Request",
+    "SLOClass",
+    "TrafficGenerator",
+    "VhostStyleServer",
+    "ZipfLengths",
+]

@@ -1,0 +1,61 @@
+"""Null decoder: a constant-work model for open-loop datapath experiments.
+
+DPDK benchmarks its datapath against the *null PMD* — a driver that accepts
+every packet and does no per-packet work — so queueing, admission, and copy
+behaviour are measured without the workload's own compute noise.
+``NullDecoder`` is that for the Vhost-style server: it satisfies the full
+serving model interface (``init`` / ``init_cache`` / ``prefill`` /
+``decode_step``), is jit- and donation-compatible, and emits the
+deterministic token stream ``tok -> (tok + 1) % vocab``, while costing
+near-zero compute.  The overload soak tests and ``benchmarks/
+fig17_openloop.py`` drive thousands of virtual-clock steps through the REAL
+pipeline (WQs, batch descriptors, reorder array, KV pool) with this model
+in the decode slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class NullDecoder:
+    """Minimal model honouring the serving interface.
+
+    The cache is one stacked segment ``[1, B, 1]`` (so ``_splice_cache``
+    exercises the same stacked-leaf path a real scanned decoder hits) plus
+    the ``lengths`` vector every cache carries."""
+
+    def __init__(self, vocab_size: int = 256):
+        if vocab_size < 2:
+            raise ValueError(f"vocab_size must be >= 2, got {vocab_size}")
+        self.vocab_size = vocab_size
+
+    def init(self, key) -> dict:
+        return {}
+
+    def init_cache(self, batch: int, max_cache_len: int) -> dict:
+        return {
+            "segments": [{"state": jnp.zeros((1, batch, 1), jnp.float32)}],
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, batch: dict, max_cache_len: int):
+        tokens = batch["tokens"]  # [B, S]
+        b, s = tokens.shape
+        cache = {
+            "segments": [{"state": jnp.zeros((1, b, 1), jnp.float32)}],
+            "lengths": jnp.full((b,), s, jnp.int32),
+        }
+        logits = jax.nn.one_hot((tokens[:, -1] + 1) % self.vocab_size,
+                                self.vocab_size)
+        return cache, logits, cache["lengths"]
+
+    def decode_step(self, params, cache: dict, tokens):
+        # tokens [B, 1] -> logits [B, V]; the cache only tracks lengths
+        logits = jax.nn.one_hot((tokens[:, 0] + 1) % self.vocab_size,
+                                self.vocab_size)
+        cache = {
+            "segments": cache["segments"],
+            "lengths": cache["lengths"] + 1,
+        }
+        return logits, cache

@@ -16,20 +16,30 @@ pattern (§6.4) mapped onto LLM decode:
                           completed; commits stop at the first incomplete
                           entry so requests always admit in arrival order.
   DWQ-per-core binding -> one DWQ per server worker (G6).
+  open-loop traffic    -> ``run_open_loop`` drives the server from a
+                          ``TrafficGenerator`` on a virtual clock: arrivals
+                          land whether or not the server keeps up, SLO
+                          classes map onto the priority WQs, and overload is
+                          shed at admission (watermarks/occupancy) or on
+                          ``QueueFull`` backpressure — the paper's sustained
+                          packet-arrival regime instead of a replayed list.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
 import time
-from collections import deque
+from collections import Counter, deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Device, OpType, Status, WorkDescriptor, WQConfig
+from repro.core import Device, OpType, QueueFull, Status, WorkDescriptor, WQConfig
 from repro.core.descriptor import BatchDescriptor
+from repro.serving.slo import DEFAULT_SLO_CLASSES, classes_by_name
 
 #: default WQ provisioning for a serving device (paper Fig. 9 + G6): a small
 #: high-priority dedicated WQ for latency-critical admission copies (steered
@@ -52,35 +62,72 @@ class Request:
     # and whose KV shard should hold them.  None = assigned at enqueue
     # (round-robin across the fabric) or left unset on a single-node device.
     home_node: Optional[int] = None
+    # SLO class (serving/slo.py): picks the admission-copy WQ and the
+    # admission priority.  The default keeps the pre-SLO behaviour — every
+    # admission copy rides the high-priority latency WQ.
+    slo: str = "latency"
     arrived_at: float = dataclasses.field(default_factory=time.perf_counter)
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    # virtual-clock stamps (open-loop runs): arrival_s comes from the
+    # traffic trace; the server stamps the other two from its ``now_s``
+    arrival_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    # device KV pages reserved at admission (0 = none / kv_pool disabled)
+    kv_pages: int = 0
     output: List[int] = dataclasses.field(default_factory=list)
 
 
 class ReorderArray:
     """In-order commit over out-of-order completions (paper Fig. 16a).
-    Entries are Futures (anything with ``is_done()``)."""
+    Entries are Futures (anything with ``is_done()``).
+
+    ``pop_completed`` is atomic AND reentrancy-guarded.  Under continuous
+    admission a completion can be observed mid-drain — a future's
+    ``is_done()`` pumps the engine, whose completion callback may re-enter
+    the commit path while the outer drain is between its done-check and its
+    pop.  The unguarded check-then-pop then commits the wrong entry: the
+    inner call pops the head the outer call just checked, and the outer pop
+    takes the NEXT (possibly incomplete) entry — a double/premature commit
+    that re-admits a slot.  tests/test_serving.py pins the crafted
+    completion order that reproduced this."""
 
     def __init__(self, size: int = 128):
         self.size = size
         self._entries: deque = deque()  # (tag, future, payload)
+        self._lock = threading.RLock()
+        self._draining = False
 
     def push(self, tag: int, future, payload: Any):
-        self._entries.append((tag, future, payload))
+        with self._lock:
+            self._entries.append((tag, future, payload))
 
     def pop_completed(self) -> List[Tuple[int, Any]]:
-        """Commit the longest completed PREFIX (in-order semantics)."""
-        out = []
-        while self._entries and self._entries[0][1].is_done():
-            tag, fut, payload = self._entries.popleft()
-            out.append((tag, payload))
-        return out
+        """Commit the longest completed PREFIX (in-order semantics).  A
+        reentrant call (completion callback firing inside ``is_done()``)
+        returns [] — the outer drain owns the commit."""
+        with self._lock:
+            if self._draining:
+                return []
+            self._draining = True
+            try:
+                out: List[Tuple[int, Any]] = []
+                while self._entries:
+                    tag, fut, payload = self._entries[0]
+                    if not fut.is_done():
+                        break
+                    self._entries.popleft()
+                    out.append((tag, payload))
+                return out
+            finally:
+                self._draining = False
 
     def pending_futures(self) -> List[Any]:
         """The in-flight entries' futures, head first — the wait set for
         ``device.wait_any``/``as_completed``."""
-        return [fut for _, fut, _ in self._entries]
+        with self._lock:
+            return [fut for _, fut, _ in self._entries]
 
     def __len__(self):
         return len(self._entries)
@@ -91,7 +138,8 @@ class VhostStyleServer:
 
     def __init__(self, model, params, *, slots: int = 4, max_cache_len: int = 256,
                  device: Optional[Device] = None, burst: int = 32,
-                 topology=None, observer=None):
+                 topology=None, observer=None, kv_pool=None,
+                 slo_classes=None, admission=None, tracker=None):
         from repro.launch.steps import make_decode_step, make_prefill_step
 
         self.model = model
@@ -118,6 +166,21 @@ class VhostStyleServer:
         # admission copies gate time-to-first-token: steer them to the
         # high-priority WQ when the device has one, else the default WQ
         self._copy_wq = "latency" if self.device.has_wq("latency") else None
+        # SLO classes (serving/slo.py): per-request WQ mapping + admission
+        # priority; registered with the device so submits carry slo= hints
+        self._slo_classes = classes_by_name(slo_classes or DEFAULT_SLO_CLASSES)
+        self.device.register_slo_classes(self._slo_classes.values())
+        # optional PagedKVPool: admission reserves the prompt's device pages
+        # before the copy burst, completion/shed releases them — the KV
+        # occupancy is then a real admission signal and the no-leak contract
+        # extends to the open-loop path
+        self.kv_pool = kv_pool
+        # optional slo.AdmissionController / slo.LatencyTracker, wired by
+        # run_open_loop or the caller
+        self.admission = admission
+        self.tracker = tracker
+        # virtual clock (seconds) for open-loop runs; the driver advances it
+        self.now_s: float = 0.0
         self.reorder = ReorderArray()
         self.queue: deque = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
@@ -128,8 +191,10 @@ class VhostStyleServer:
         self._tokens = jnp.zeros((slots, 1), jnp.int32)
         self._tag = 0
         self.metrics = {"decoded_tokens": 0, "admitted": 0, "completed": 0,
-                        "copy_bursts": 0, "steps": 0,
-                        "admitted_by_node": {}}
+                        "copy_bursts": 0, "steps": 0, "shed": 0,
+                        "shed_backpressure": 0,
+                        "backpressure_events": 0, "kv_alloc_failures": 0,
+                        "admitted_by_node": {}, "by_class": {}}
         # anything with .gauge(name, value) — normally an obs.Sampler; each
         # step() emits per-stage wall times and occupancy gauges so the
         # serving loop shows up in the same time series as the engines
@@ -171,27 +236,111 @@ class VhostStyleServer:
         tok = int(jnp.argmax(logits[0]))
         req.output.append(tok)
         req.first_token_at = time.perf_counter()
+        req.first_token_s = self.now_s
         self._tokens = self._tokens.at[slot, 0].set(tok)
         self.active[slot] = req
         self.metrics["admitted"] += 1
+        self._class_metrics(req.slo)["admitted"] += 1
         if req.home_node is not None:
             by_node = self.metrics["admitted_by_node"]
             by_node[req.home_node] = by_node.get(req.home_node, 0) + 1
 
+    # ------------------------------------------------------------------ bookkeeping helpers
+    def _class_metrics(self, slo: str) -> Dict[str, int]:
+        m = self.metrics["by_class"].get(slo)
+        if m is None:
+            m = self.metrics["by_class"][slo] = {
+                "admitted": 0, "completed": 0, "shed": 0}
+        return m
+
+    def _wq_for(self, req: Request):
+        """The admission-copy WQ for a request's SLO class — the PR 2
+        priority-WQ mapping; falls back to the legacy latency/default WQ
+        when the class (or its WQ) is not provisioned on this device."""
+        cls = self._slo_classes.get(req.slo)
+        if cls is not None and cls.wq is not None and self.device.has_wq(cls.wq):
+            return cls.wq
+        return self._copy_wq
+
+    def _pop_next_request(self) -> Request:
+        """Admission order: highest SLO-class priority first, FIFO within a
+        class — latency traffic jumps the bulk backlog, never the reverse."""
+        if len(self.queue) == 1 or not self._slo_classes:
+            return self.queue.popleft()
+        best_i, best_p = 0, -1
+        for i, req in enumerate(self.queue):
+            cls = self._slo_classes.get(req.slo)
+            p = cls.priority if cls is not None else 0
+            if p > best_p:
+                best_i, best_p = i, p
+        req = self.queue[best_i]
+        del self.queue[best_i]
+        return req
+
+    def _release_kv(self, req: Request):
+        if self.kv_pool is not None and req.kv_pages:
+            self.kv_pool.free(req.req_id)
+            req.kv_pages = 0
+
+    def _shed_now(self, req: Request):
+        """Drop an already-dequeued request (backpressure shed): release
+        its KV reservation and account the drop per class."""
+        self._release_kv(req)
+        self.metrics["shed"] += 1
+        self.metrics["shed_backpressure"] += 1
+        self._class_metrics(req.slo)["shed"] += 1
+
+    def _reserve_kv(self, req: Request) -> bool:
+        """Reserve the prompt's device pages before moving its bytes (the
+        admission copy lands in KV); False = no capacity right now."""
+        if self.kv_pool is None or req.kv_pages:
+            return True
+        n_pages = max(1, math.ceil(len(req.prompt) / self.kv_pool.page_tokens))
+        node = (req.home_node if self.topology.n_nodes > 1 else None)
+        if not self.kv_pool.alloc(req.req_id, n_pages, node=node):
+            self.metrics["kv_alloc_failures"] += 1
+            return False
+        req.kv_pages = n_pages
+        return True
+
     # ------------------------------------------------------------------ stage 2: submit batched copies
     def _stage_submit_copies(self):
         while self._free_slots and self.queue:
+            req = self._pop_next_request()
+            if not self._reserve_kv(req):
+                # KV pressure is backpressure too: shed-first classes drop,
+                # protected classes wait at the head for pages to free
+                if (self.admission is not None
+                        and req.slo in self.admission.classes
+                        and self.admission.on_backpressure(req.slo)):
+                    self._shed_now(req)
+                    continue
+                self.queue.appendleft(req)
+                break
             slot = self._free_slots.pop()
-            req = self.queue.popleft()
             # burst the prompt over as a batch descriptor (packet copy analogue)
             chunks = np.array_split(req.prompt, max(1, len(req.prompt) // 64))
             descs = [
                 WorkDescriptor(op=OpType.MEMCPY, src=jnp.asarray(np.ascontiguousarray(c)))
                 for c in chunks[: self.burst]
             ]
-            fut = self.device.batch_async(descs, producer=f"slot{slot}",
-                                          wq=self._copy_wq,
-                                          node=req.home_node)
+            try:
+                fut = self.device.batch_async(descs, producer=f"slot{slot}",
+                                              wq=self._wq_for(req),
+                                              node=req.home_node)
+            except QueueFull:
+                # engine-side backpressure survived bounded backoff: give
+                # the slot back, then either shed (shed-first classes) or
+                # hold the request for the next step — never busy-loop
+                self._free_slots.append(slot)
+                self.metrics["backpressure_events"] += 1
+                if (self.admission is not None
+                        and req.slo in self.admission.classes
+                        and self.admission.on_backpressure(req.slo)):
+                    self._shed_now(req)
+                    continue
+                self.queue.appendleft(req)
+                break
             self.reorder.push(self._tag, fut, (slot, req))
             self._tag += 1
             self.metrics["copy_bursts"] += 1
@@ -209,10 +358,16 @@ class VhostStyleServer:
             req.output.append(tok)
             if len(req.output) >= req.max_new_tokens:
                 req.done_at = time.perf_counter()
+                req.done_s = self.now_s
                 done_slots.append(slot)
         for slot in done_slots:
+            req = self.active.pop(slot)
             self.metrics["completed"] += 1
-            del self.active[slot]
+            self._class_metrics(req.slo)["completed"] += 1
+            self._release_kv(req)
+            if self.tracker is not None and req.arrival_s is not None:
+                self.tracker.record(req.slo, req.arrival_s,
+                                    req.first_token_s, req.done_s)
             self._free_slots.append(slot)
 
     # ------------------------------------------------------------------ loop
@@ -242,6 +397,15 @@ class VhostStyleServer:
             obs.gauge("serving.stage.poll_us", (t1 - t0) * 1e6)
             obs.gauge("serving.stage.submit_us", (t2 - t1) * 1e6)
             obs.gauge("serving.stage.decode_us", (t3 - t2) * 1e6)
+            # per-SLO-class gauges: queue depth now, admitted/shed to date —
+            # the overload experiments read these next to the engine series
+            queued = Counter(r.slo for r in self.queue)
+            for name in self._slo_classes:
+                cm = self._class_metrics(name)
+                obs.gauge(f"serving.class.{name}.queue_depth",
+                          queued.get(name, 0))
+                obs.gauge(f"serving.class.{name}.admitted", cm["admitted"])
+                obs.gauge(f"serving.class.{name}.shed", cm["shed"])
 
     def run_until_drained(self, max_steps: int = 10_000):
         steps = 0
@@ -250,6 +414,97 @@ class VhostStyleServer:
             steps += 1
         self.device.drain()
         return steps
+
+    # ------------------------------------------------------------------ open loop
+    def run_open_loop(self, traffic, horizon_s: float, *,
+                      step_s: float = 0.01, vocab_size: int = 256,
+                      drain: bool = True, max_steps: int = 1_000_000) -> dict:
+        """Drive the server open-loop from a ``TrafficGenerator`` for
+        ``horizon_s`` VIRTUAL seconds: arrivals land at their trace times
+        whether or not the server keeps up (the paper's §6 sustained-load
+        regime).  Each ``step()`` advances the virtual clock by ``step_s``.
+
+        Admission runs through ``self.admission`` when set (watermarks,
+        occupancy probes, backpressure sheds); latencies land in
+        ``self.tracker`` when set.  ``drain=True`` keeps stepping past the
+        horizon until all admitted work completes, so the accounting
+        identity  generated == admitted + shed + in-flight  closes with
+        in-flight == 0 — the overload soak test's conservation law.
+
+        Returns a report: offered/sustained RPS, per-class latency summary,
+        shed/admission counters, and the in-flight remainder."""
+        if step_s <= 0:
+            raise ValueError(f"step_s must be > 0, got {step_s}")
+        events = traffic.trace(horizon_s)
+        i = 0
+        t = 0.0
+        steps = 0
+        generated = admitted = shed = 0
+        # cumulative-counter baselines, so a server reused across runs
+        # reports THIS run's deltas
+        completed_0 = self.metrics["completed"]
+        shed_0 = self.metrics["shed"]
+        bp_shed_0 = self.metrics["shed_backpressure"]
+        queued_by_class: Counter = Counter()
+        while True:
+            self.now_s = t
+            while i < len(events) and events[i].arrival_s <= t:
+                ev = events[i]
+                i += 1
+                generated += 1
+                if self.admission is not None and ev.slo in self.admission.classes:
+                    ok = self.admission.admit(ev.slo, queued_by_class[ev.slo])
+                else:
+                    ok = True
+                if ok:
+                    req = ev.materialize(vocab_size)
+                    self.enqueue(req)
+                    queued_by_class[ev.slo] += 1
+                    admitted += 1
+                else:
+                    self.metrics["shed"] += 1
+                    self._class_metrics(ev.slo)["shed"] += 1
+                    shed += 1
+            had_queued = len(self.queue)
+            work = bool(self.queue or self.active or len(self.reorder))
+            if i >= len(events) and not work:
+                break
+            if not drain and t >= horizon_s:
+                break
+            if steps >= max_steps:
+                break
+            self.step()
+            steps += 1
+            # dequeues (admits + backpressure sheds) shrink the per-class
+            # waiting counts the admission watermark reads
+            if len(self.queue) != had_queued:
+                queued_by_class = Counter(r.slo for r in self.queue)
+            t += step_s
+        in_flight = len(self.queue) + len(self.reorder) + len(self.active)
+        completed = self.metrics["completed"] - completed_0
+        bp_shed = self.metrics["shed_backpressure"] - bp_shed_0
+        report = {
+            "horizon_s": horizon_s,
+            "virtual_s": t,
+            "steps": steps,
+            "generated": generated,
+            # enqueued minus later backpressure sheds: what the server
+            # actually took responsibility for (== completed + in_flight)
+            "admitted": admitted - bp_shed,
+            "shed": self.metrics["shed"] - shed_0,
+            "shed_backpressure": bp_shed,
+            "completed": completed,
+            "in_flight": in_flight,
+            "offered_rps": traffic.offered_rps(),
+            "sustained_rps": completed / max(t, step_s),
+            "by_class": {k: dict(v) for k, v in self.metrics["by_class"].items()},
+        }
+        if self.tracker is not None:
+            report["latency"] = self.tracker.summary()
+            goodput = sum(self.tracker.within_slo(c)
+                          for c in self.tracker.classes)
+            report["goodput_rps"] = goodput / max(t, step_s)
+        return report
 
 
 def _splice_cache(batch_cache, one_cache, slot: int):

@@ -16,6 +16,9 @@ from repro.distributed.fault import (
 from repro.distributed.sharding import ShardingRules
 from jax.sharding import PartitionSpec as P
 
+# minutes-scale on CPU: excluded from the quick lane (-m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def _rules(model=16, data=16, pod=None):
     axes = {"data": data, "model": model}

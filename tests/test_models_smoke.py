@@ -11,6 +11,9 @@ from repro.models.api import build_model, make_batch
 
 B, S = 2, 32
 
+# minutes-scale on CPU: excluded from the quick lane (-m "not slow")
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def key():

@@ -6,7 +6,12 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+# minutes-scale (subprocess jax re-init): excluded from the quick lane
+pytestmark = pytest.mark.slow
 
 SCRIPT = r"""
 import os

@@ -1,0 +1,226 @@
+"""Overload soak: 2x-capacity open-loop traffic through the real pipeline.
+
+The server runs with the NullDecoder (constant-work model), so thousands of
+virtual-clock steps exercise the REAL datapath — priority WQs, batch
+descriptors, reorder array, paged KV pool — while the assertions stay about
+queueing and admission, not model compute.  The invariants pinned here are
+the ones ISSUE.md names:
+
+  conservation   admitted + shed + in-flight == generated (in-flight == 0
+                 after drain), and the AdmissionController's own per-class
+                 ledger closes;
+  no KV leak     every reserved page is back in the pool after drain;
+  SLO isolation  the latency class's p99 stays strictly below bulk's under
+                 overload (priority admission + priority WQ + shed-first
+                 bulk).
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.nullmodel import NullDecoder
+from repro.serving.pipeline import VhostStyleServer
+from repro.serving.slo import (
+    DEFAULT_SLO_CLASSES,
+    AdmissionController,
+    LatencyTracker,
+    SLOClass,
+    percentile,
+)
+from repro.serving.traffic import PoissonArrivals, TrafficGenerator, ZipfLengths
+
+
+def _make_server(*, slots=4, pool_pages=64, watermark=24):
+    pool = PagedKVPool(n_device_pages=pool_pages, n_host_pages=4,
+                       page_tokens=32, kv_dim=8)
+    adm = AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=watermark)
+    tracker = LatencyTracker(DEFAULT_SLO_CLASSES)
+    server = VhostStyleServer(NullDecoder(64), {}, slots=slots,
+                              max_cache_len=128, kv_pool=pool,
+                              admission=adm, tracker=tracker)
+    return server, pool, adm, tracker
+
+
+def _traffic(rate_rps: float, seed: int = 7) -> TrafficGenerator:
+    return TrafficGenerator(
+        PoissonArrivals(rate_rps, seed=seed),
+        prompt_lengths=ZipfLengths(s=1.2, lo=8, hi=64),
+        output_lengths=ZipfLengths(s=1.2, lo=2, hi=16),
+        class_mix={"latency": 0.25, "bulk": 0.75},
+        seed=seed,
+    )
+
+
+def test_overload_soak_conservation_and_slo_isolation():
+    """2x-capacity Poisson for several virtual seconds, then drain."""
+    server, pool, adm, tracker = _make_server()
+    # capacity ~ slots / (mean decode steps per request * step_s); offered
+    # is ~2x that, so the watermark + shed-first machinery must engage
+    report = server.run_open_loop(_traffic(150.0), horizon_s=6.0,
+                                  step_s=0.02, vocab_size=64)
+
+    # -- conservation -------------------------------------------------------
+    assert report["generated"] > 400  # the soak actually soaked
+    assert report["in_flight"] == 0   # drained
+    assert (report["admitted"] + report["shed"] + report["in_flight"]
+            == report["generated"])
+    assert report["admitted"] == report["completed"]
+    assert adm.closes()               # per-class ledger closes too
+    t = adm.totals()
+    assert t["generated"] == report["generated"]
+    assert t["admitted"] + t["shed"] == t["generated"]
+
+    # -- overload engaged gracefully ---------------------------------------
+    assert report["shed"] > 0
+    assert report["completed"] > 100  # still doing real work while shedding
+    assert 0 < report["sustained_rps"] < report["offered_rps"]
+
+    # -- no KV page leak after drain ---------------------------------------
+    assert pool.stats.device_pages_used == 0
+    assert pool.stats.host_pages_used == 0
+    assert not pool.page_table
+    assert len(server.queue) == 0 and not server.active
+    assert len(server.reorder) == 0
+
+    # -- SLO isolation under overload --------------------------------------
+    # bulk is shed-first AND priority-starved at 2x load: few completions
+    # survive, but enough to compare tails
+    assert tracker.count("latency") > 50 and tracker.count("bulk") >= 10
+    lat_p99 = tracker.p("latency", 99)
+    bulk_p99 = tracker.p("bulk", 99)
+    assert lat_p99 < bulk_p99  # strictly: priority admission + shed-first bulk
+    # bulk absorbs the shedding, the latency class keeps its admissions
+    assert (adm.counters["bulk"]["shed"]
+            > adm.counters["latency"]["shed"])
+
+
+def test_underload_sheds_nothing_and_meets_targets():
+    server, pool, adm, tracker = _make_server()
+    # step_s=0.01: a 16-token response costs ~0.18 virtual seconds unloaded,
+    # inside the 0.25s latency-class target the summary asserts below
+    report = server.run_open_loop(_traffic(8.0, seed=3), horizon_s=5.0,
+                                  step_s=0.01, vocab_size=64)
+    assert report["generated"] > 20
+    assert report["shed"] == 0
+    assert report["completed"] == report["generated"]
+    assert pool.stats.device_pages_used == 0 and not pool.page_table
+    s = tracker.summary()
+    # lightly-loaded server: both classes inside their p99 targets
+    assert s["latency"]["p99_s"] <= tracker.classes["latency"].target_p99_s
+    assert s["bulk"]["p99_s"] <= tracker.classes["bulk"].target_p99_s
+    assert report["goodput_rps"] == pytest.approx(report["sustained_rps"])
+
+
+def test_soak_trace_is_deterministic_and_always_conserves():
+    """Same traffic seed, fresh server: the generated population is
+    identical (the trace is pure), and the conservation identity closes on
+    every run even though engine copy timings are wall-clock and may shift
+    a request between completed and shed."""
+    r1 = _make_server()[0].run_open_loop(_traffic(150.0), horizon_s=3.0,
+                                         step_s=0.02, vocab_size=64)
+    r2 = _make_server()[0].run_open_loop(_traffic(150.0), horizon_s=3.0,
+                                         step_s=0.02, vocab_size=64)
+    assert r1["generated"] == r2["generated"]
+    for r in (r1, r2):
+        assert r["in_flight"] == 0
+        assert r["admitted"] + r["shed"] == r["generated"]
+        assert r["admitted"] == r["completed"]
+
+
+def test_kv_pressure_backpressure_no_leak():
+    """A tiny device pool forces KV-allocation backpressure mid-run; pages
+    must still all come home and the ledger must still close."""
+    server, pool, adm, _ = _make_server(pool_pages=6, watermark=16)
+    report = server.run_open_loop(_traffic(120.0, seed=11), horizon_s=4.0,
+                                  step_s=0.02, vocab_size=64)
+    assert server.metrics["kv_alloc_failures"] > 0  # pressure actually hit
+    assert report["in_flight"] == 0
+    assert (report["admitted"] + report["shed"] == report["generated"])
+    assert pool.stats.device_pages_used == 0 and not pool.page_table
+    assert adm.closes()
+
+
+# --------------------------------------------------------------------------- controller units
+def test_admission_watermark_and_shed_first_budget():
+    adm = AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=8)
+    # protected class admits up to the full watermark
+    assert adm.admit("latency", queue_depth=7)
+    assert not adm.admit("latency", queue_depth=8)
+    # shed-first class gets half the budget
+    assert adm.admit("bulk", queue_depth=3)
+    assert not adm.admit("bulk", queue_depth=4)
+    assert adm.closes()
+    assert adm.counters["bulk"]["shed_watermark"] == 1
+
+
+def test_backpressure_sheds_bulk_keeps_latency():
+    adm = AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=8)
+    assert adm.admit("bulk", 0) and adm.admit("latency", 0)
+    assert adm.on_backpressure("bulk") is True       # shed-first: dropped
+    assert adm.on_backpressure("latency") is False   # protected: kept queued
+    assert adm.counters["bulk"]["admitted"] == 0
+    assert adm.counters["bulk"]["shed_backpressure"] == 1
+    assert adm.counters["latency"]["admitted"] == 1
+    assert adm.closes()
+
+
+def test_admission_wq_occupancy_probe():
+    class _FakeDevice:
+        def __init__(self, occ):
+            self.occ = occ
+
+        def occupancy(self, wq=None, node=None):
+            return self.occ
+
+    adm = AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=8,
+                              wq_occupancy_high=0.95,
+                              device=_FakeDevice(0.99))
+    assert not adm.admit("latency", 0)
+    assert adm.counters["latency"]["shed_wq_occupancy"] == 1
+    adm2 = AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=8,
+                               device=_FakeDevice(0.5))
+    assert adm2.admit("latency", 0)
+
+
+def test_admission_sampler_node_occupancy():
+    class _FakeSeries(list):
+        def last(self):
+            return self[-1]
+
+    class _FakeSampler:
+        def __init__(self, series):
+            self.series = series
+
+    hot = {"engine.n0dsa0.wq_occupancy": _FakeSeries([0.4, 0.99])}
+    adm = AdmissionController(DEFAULT_SLO_CLASSES, queue_watermark=8,
+                              node_occupancy_high=0.98,
+                              sampler=_FakeSampler(hot))
+    assert not adm.admit("latency", 0, node=0)   # node 0 saturated
+    assert adm.admit("latency", 0, node=1)       # node 1 has no series: admit
+    assert adm.counters["latency"]["shed_node_occupancy"] == 1
+    assert adm.closes()
+
+
+def test_latency_tracker_percentiles_and_goodput():
+    classes = (SLOClass("latency", target_p99_s=0.5),
+               SLOClass("bulk", target_p99_s=2.0))
+    tr = LatencyTracker(classes)
+    assert np.isnan(tr.p("latency", 99))  # empty class: NaN, never passes
+    for i in range(10):
+        tr.record("latency", arrival_s=0.0, first_token_s=0.1 * i,
+                  done_s=0.1 * (i + 1))
+    assert tr.p("latency", 50) == pytest.approx(0.5)
+    assert tr.p("latency", 99) == pytest.approx(1.0)
+    assert tr.p("latency", 50, kind="ttft") == pytest.approx(0.4)
+    assert tr.within_slo("latency") == 5  # e2e <= 0.5s
+    with pytest.raises(KeyError):
+        tr.record("nope", 0.0, None, 1.0)
+
+
+def test_percentile_nearest_rank():
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+    assert percentile([3.0, 1.0, 2.0], 100) == 3.0
+    assert percentile([3.0, 1.0, 2.0], 0) == 1.0
+    assert np.isnan(percentile([], 99))
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)

@@ -63,6 +63,50 @@ def test_reorder_array_commits_in_order():
     assert len(ra) == 0
 
 
+class _ReentrantRecord:
+    """A future whose ``is_done()`` re-enters ``pop_completed`` — the shape
+    of the real race: polling a completion record pumps the engine, and the
+    engine's completion callback lands back in the commit path while the
+    outer drain sits between its done-check and its pop."""
+
+    def __init__(self, ra):
+        self.ra = ra
+        self.done = False
+        self.fired = False
+        self.inner_commits = []
+
+    def is_done(self):
+        if self.done and not self.fired:
+            self.fired = True  # re-enter exactly once, mid-drain
+            self.inner_commits.append(self.ra.pop_completed())
+        return self.done
+
+
+def test_reorder_array_reentrant_drain_commits_each_tag_once():
+    """Regression for the double/premature-commit race: with an unguarded
+    check-then-pop, the reentrant inner call pops the head the outer drain
+    just checked, so the outer ``popleft`` takes the NEXT (incomplete)
+    entry — head committed twice, successor committed early.  The guard
+    makes the inner call a no-op ([]) and the outer drain atomic."""
+    ra = ReorderArray()
+    head = _ReentrantRecord(ra)
+    mid, tail = _FakeRecord(), _FakeRecord()
+    ra.push(0, head, payload="head")
+    ra.push(1, mid, payload="mid")
+    ra.push(2, tail, payload="tail")
+    head.done = True
+    tail.done = True  # out-of-order completion: tail done, mid not
+
+    out = ra.pop_completed()
+    assert head.inner_commits == [[]]          # reentrant call committed nothing
+    assert out == [(0, "head")]                # head committed exactly once
+    assert len(ra) == 2                        # mid NOT popped prematurely
+
+    mid.done = True
+    assert ra.pop_completed() == [(1, "mid"), (2, "tail")]
+    assert len(ra) == 0
+
+
 @pytest.mark.slow
 def test_vhost_server_end_to_end(rng):
     cfg = get_config("tinyllama-1.1b").reduced()

@@ -5,11 +5,15 @@ from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import make_device
 from repro.core.telemetry import Telemetry
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+# minutes-scale (subprocess jax re-init): excluded from the quick lane
+pytestmark = pytest.mark.slow
 
 
 def test_telemetry_counters(rng):
