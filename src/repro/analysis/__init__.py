@@ -1,0 +1,41 @@
+"""Static + runtime analysis for the descriptor/Future programming model.
+
+Three checkers, one theme: once offload is asynchronous (and, with
+descriptor chaining, host-invisible), correctness must be established
+BEFORE submission, not observed after a late engine failure.
+
+  desclint   descriptor validity (paper §3.2: the 64-byte contract) —
+             op-specific operand checks enforced at ``Device.submit`` via
+             ``make_device(validate="strict"|"warn"|"off")``; typed
+             ``DescriptorError`` taxonomy (DESC1xx codes).
+  apilint    AST lint over source trees for Future/Device API misuse
+             (DSA1xx codes): dropped futures, blocking waits inside
+             completion callbacks, raw ``kick()`` busy-loops, swallowed
+             ``QueueFull``.  CLI: ``tools/dsalint.py``.
+  lockcheck  opt-in lockdep-style runtime detector: lock-acquisition-order
+             graph over the engine/completion/serving locks, cycle and
+             held-lock-while-notifying hazards.  Enabled under pytest with
+             ``--lockcheck``.
+
+Import discipline: ``repro.core`` modules import
+``repro.analysis.lockcheck`` at module-import time and ``desclint``
+imports ``repro.core.descriptor`` — this package ``__init__`` therefore
+stays LAZY (no eager submodule imports) to keep the graph acyclic.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("apilint", "desclint", "lockcheck")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

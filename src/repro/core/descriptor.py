@@ -76,13 +76,24 @@ class WorkDescriptor:
 
     @property
     def nbytes(self) -> int:
+        # Degenerate operands (empty pools, dtype-less duck types) size to 0
+        # rather than raising: desclint flags them as DESC106, and sizing is
+        # used on telemetry paths that must never throw.
         if self.op == OpType.FILL:
-            return self.n_words * 4
+            return max(self.n_words, 0) * 4
         if self.op == OpType.BATCH_COPY and self.src is not None:
-            per = int(self.src.size * self.src.dtype.itemsize // self.src.shape[0])
-            return per * int(self.src_idx.shape[0])
+            itemsize = getattr(getattr(self.src, "dtype", None), "itemsize", None)
+            shape = getattr(self.src, "shape", None)
+            idx_shape = getattr(self.src_idx, "shape", None)
+            if itemsize is None or not shape or shape[0] == 0 or not idx_shape:
+                return 0
+            per = int(self.src.size * itemsize // shape[0])
+            return per * int(idx_shape[0])
         if self.src is not None and hasattr(self.src, "size"):
-            return int(self.src.size * self.src.dtype.itemsize)
+            itemsize = getattr(getattr(self.src, "dtype", None), "itemsize", None)
+            if itemsize is None:
+                return 0
+            return int(self.src.size * itemsize)
         return 0
 
 

@@ -36,6 +36,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Unio
 
 import jax
 
+from repro.analysis import lockcheck as _lockcheck
 from repro.core import completion as _completion
 from repro.core.completion import WaitPolicy, WaitStats, get_wait_policy
 from repro.core.descriptor import (
@@ -78,7 +79,7 @@ class Future:
         self.record = record
         self._callbacks: List[Callable[["Future"], None]] = []
         self._fired = False
-        self._cb_lock = threading.Lock()
+        self._cb_lock = _lockcheck.checked_lock("future.callbacks")
 
     # -- state ---------------------------------------------------------------
     @property
@@ -184,8 +185,12 @@ class Future:
                 return
             self._fired = True
             callbacks, self._callbacks = self._callbacks, []
-        for fn in callbacks:
-            fn(self)
+        if callbacks:
+            # user code runs strictly outside _cb_lock; lockcheck verifies
+            # no OTHER instrumented lock is held at this dispatch point
+            with _lockcheck.notify_region("future.fire_callbacks"):
+                for fn in callbacks:
+                    fn(self)
 
 
 class ChainedFuture(Future):
@@ -298,7 +303,7 @@ class RoundRobinPolicy(SubmitPolicy):
 
     def __init__(self):
         self._next = 0
-        self._lock = threading.Lock()
+        self._lock = _lockcheck.checked_lock("policy.round_robin")
 
     def select(self, engines, desc, producer):
         with self._lock:
@@ -425,7 +430,15 @@ class Device:
                  config_kw: Optional[Dict[str, Any]] = None,
                  wq_configs: Optional[Sequence[WQConfig]] = None,
                  pes_per_group: int = 4,
-                 max_retries: int = 10, backoff_base_s: float = 20e-6):
+                 max_retries: int = 10, backoff_base_s: float = 20e-6,
+                 validate: str = "warn"):
+        if validate not in ("strict", "warn", "off"):
+            raise ValueError(f"validate must be 'strict', 'warn', or 'off', "
+                             f"got {validate!r}")
+        # submit-time descriptor validation mode (repro.analysis.desclint):
+        # strict raises the typed DescriptorError taxonomy, warn bumps the
+        # desclint_warnings counter, off skips the checks
+        self.validate = validate
         if engines is not None:
             if config is not None or wq_configs is not None or config_kw is not None:
                 raise ValueError("pass pre-built engines OR a config/wq_configs "
@@ -474,12 +487,13 @@ class Device:
             "decisions_by_op": Counter(),  # (engine, op) -> submissions
             "backoff_retries": 0,
             "queue_full": 0,
+            "desclint_warnings": 0,  # warn-mode validation findings
         }
-        self._lock = threading.Lock()
+        self._lock = _lockcheck.checked_lock("device.stats")
         # serializes engine mutation (records/slots/deferred have no internal
         # locking) so background submitters — e.g. async checkpoint CRCs —
         # can share the device with foreground traffic
-        self._engine_lock = threading.RLock()
+        self._engine_lock = _lockcheck.checked_rlock("device.engine")
         # ---- completion subsystem (core/completion.py) -------------------
         # default wait scheme for this device; every wait can override it
         self.wait_policy = get_wait_policy(wait_policy)
@@ -492,7 +506,7 @@ class Device:
             weakref.WeakValueDictionary()
         )
         self._sinks: List[Any] = []  # registered CompletionSets
-        self._sinks_lock = threading.Lock()
+        self._sinks_lock = _lockcheck.checked_lock("device.sinks")
         # attached observability samplers (repro.obs): registered on
         # Sampler.start(), detached on stop(), so shutdown paths can find
         # and stop any live background sampler threads
@@ -617,6 +631,8 @@ class Device:
             if priority is None and wq is None:
                 priority = getattr(cls, "priority", None)
         self._stamp_locality(desc, node)
+        if self.validate != "off":
+            self._desclint(desc)
         eng = self.policy.select(self.engines, desc, producer)
         deps = list(after) if after is not None else None
         delay = self.backoff_base_s
@@ -645,6 +661,21 @@ class Device:
             self.policy_stats["backoff_retries"] += self.max_retries
             self.policy_stats["queue_full"] += 1
         raise QueueFull(eng.name, self.max_retries + 1)
+
+    def _desclint(self, desc: Submittable) -> None:
+        """Validate after locality stamping (so registry-vs-hint conflicts
+        were resolvable) and before placement.  Lazy import: desclint needs
+        repro.core.descriptor, which this module helps initialise."""
+        from repro.analysis import desclint
+
+        diags = desclint.check(desc, device=self)
+        if not diags:
+            return
+        if self.validate == "strict" and any(
+                d.severity == "error" for d in diags):
+            raise desclint.error_for(diags, desc=desc)
+        with self._lock:
+            self.policy_stats["desclint_warnings"] += len(diags)
 
     def promise(self) -> Promise:
         """A host-completed fence Future (see Promise)."""
@@ -871,7 +902,7 @@ class Device:
         """Run all instances dry, including cross-engine fences: a deferred
         descriptor on engine A whose parent lives on engine B resolves here
         because every engine is pumped each round."""
-        while True:
+        while True:  # dsalint: disable=DSA103 — drain IS the terminal pump
             with self._engine_lock:
                 for e in self.engines:
                     e.kick()
@@ -901,6 +932,7 @@ def make_device(n_instances: int = 1, *,
                 wq_configs: Optional[Sequence[WQConfig]] = None,
                 topology: Optional[Topology] = None,
                 max_retries: int = 10, backoff_base_s: float = 20e-6,
+                validate: str = "warn",
                 **cfg_kw) -> Device:
     """Build a Device over fresh engine instances (Fig. 10 topology).
 
@@ -912,7 +944,11 @@ def make_device(n_instances: int = 1, *,
     knobs); otherwise ``cfg_kw`` forwards to DeviceConfig.default
     (wqs_per_group, wq_size, wq_mode, pes_per_group, n_groups).
     ``wait_policy`` sets the default completion wait scheme (spin / pause /
-    umwait / interrupt — Fig. 11)."""
+    umwait / interrupt — Fig. 11).
+    ``validate`` sets the submit-time descriptor validation mode
+    (repro.analysis.desclint): "strict" raises the typed DescriptorError
+    taxonomy on malformed descriptors, "warn" (default) records them on the
+    ``desclint_warnings`` counter, "off" skips the checks."""
     if wq_configs is not None:
         pes = cfg_kw.pop("pes_per_group", 4)
         if cfg_kw:
@@ -921,7 +957,9 @@ def make_device(n_instances: int = 1, *,
         return Device(n_instances=n_instances, topology=topology, policy=policy,
                       wait_policy=wait_policy,
                       wq_configs=wq_configs, pes_per_group=pes,
-                      max_retries=max_retries, backoff_base_s=backoff_base_s)
+                      max_retries=max_retries, backoff_base_s=backoff_base_s,
+                      validate=validate)
     return Device(n_instances=n_instances, topology=topology, policy=policy,
                   wait_policy=wait_policy, config_kw=cfg_kw or None,
-                  max_retries=max_retries, backoff_base_s=backoff_base_s)
+                  max_retries=max_retries, backoff_base_s=backoff_base_s,
+                  validate=validate)

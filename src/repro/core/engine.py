@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import lockcheck as _lockcheck
 from repro.core.descriptor import (
     BatchDescriptor,
     CacheHint,
@@ -60,7 +61,7 @@ def _ready(x) -> bool:
 # otherwise serialize the engine into the host).  One shared pool — per-PE
 # concurrency is already bounded by each group's slot count.
 _PE_POOL: Optional[concurrent.futures.ThreadPoolExecutor] = None
-_PE_POOL_LOCK = threading.Lock()
+_PE_POOL_LOCK = _lockcheck.checked_lock("engine.pe_pool")
 
 
 def _pe_pool() -> concurrent.futures.ThreadPoolExecutor:
@@ -231,7 +232,7 @@ class StreamEngine:
             "local_ops": 0, "local_bytes": 0,
             "cross_ops": 0, "cross_bytes": 0, "link_bytes": 0,
         }
-        self._counters_lock = threading.Lock()
+        self._counters_lock = _lockcheck.checked_lock("engine.counters")
         # deferred submissions waiting on dependency fences:
         # (desc, group, wq, producer, deps, record)
         self._deferred: List[Tuple[Submittable, int, int, Optional[str], List[Any], CompletionRecord]] = []
@@ -588,7 +589,7 @@ class StreamEngine:
 
     def wait(self, rec: CompletionRecord):
         """UMWAIT analogue: block until the completion record resolves."""
-        while not rec.is_done():
+        while not rec.is_done():  # dsalint: disable=DSA103 — this IS the raw wait primitive WaitPolicy builds on
             self.kick()
             if rec.status == Status.RUNNING:
                 for slots in self._slots.values():
@@ -603,7 +604,7 @@ class StreamEngine:
         """Run until WQs, PE slots, AND locally-resolvable fences are empty.
         Deferred descriptors whose dependencies live on another engine are
         left for Device.drain(), which pumps every instance."""
-        while (
+        while (  # dsalint: disable=DSA103 — engine drain is the terminal pump
             any(len(w) for g in self.config.groups for w in g.wqs)
             or any(s.busy for slots in self._slots.values() for s in slots)
             or any(all(d.is_done() for d in deps) for *_, deps, _rec in self._deferred)

@@ -22,6 +22,7 @@ import threading
 import time
 from typing import Deque, Optional, Tuple, Union
 
+from repro.analysis import lockcheck as _lockcheck
 from repro.core.descriptor import BatchDescriptor, Status, WorkDescriptor
 
 Submittable = Union[WorkDescriptor, BatchDescriptor]
@@ -86,7 +87,7 @@ class WorkQueue:
         self.owner = owner
         self.traffic_class = traffic_class
         self._q: Deque[Tuple[Submittable, float]] = collections.deque()
-        self._lock = threading.Lock()
+        self._lock = _lockcheck.checked_lock("wq")
         # monotonic counters — the obs sampler reads deltas of these per
         # tick, so they only ever grow (bytes_submitted tracks descriptor
         # payload accepted into the queue, the WQ-inflow analogue)

@@ -88,7 +88,9 @@ class Sampler:
         ps = getattr(self.device, "policy_stats", None)
         if ps is not None:
             prev["policy"] = {"backoff_retries": ps["backoff_retries"],
-                              "queue_full": ps["queue_full"]}
+                              "queue_full": ps["queue_full"],
+                              "desclint_warnings":
+                                  ps.get("desclint_warnings", 0)}
         return prev
 
     # ------------------------------------------------------------------ recording
@@ -226,6 +228,9 @@ class Sampler:
                 self._record(row, "device.queue_full",
                              cur["policy"]["queue_full"]
                              - pp["queue_full"], t)
+                self._record(row, "device.desclint_warnings",
+                             cur["policy"].get("desclint_warnings", 0)
+                             - pp.get("desclint_warnings", 0), t)
 
             for gname, gval in self._pending_gauges.items():
                 row[gname] = gval

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import lockcheck as _lockcheck
 from repro.core import Device, OpType, QueueFull, Status, WorkDescriptor, WQConfig
 from repro.core.descriptor import BatchDescriptor
 from repro.serving.slo import DEFAULT_SLO_CLASSES, classes_by_name
@@ -96,7 +97,7 @@ class ReorderArray:
     def __init__(self, size: int = 128):
         self.size = size
         self._entries: deque = deque()  # (tag, future, payload)
-        self._lock = threading.RLock()
+        self._lock = _lockcheck.checked_rlock("serving.reorder")
         self._draining = False
 
     def push(self, tag: int, future, payload: Any):

@@ -21,3 +21,40 @@ def rng(request):
     one shared stream in collection order, so subsets saw different data
     than the full run.)"""
     return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))
+
+
+# --------------------------------------------------------------------------- lockcheck
+def pytest_addoption(parser):
+    parser.addoption(
+        "--lockcheck", action="store_true", default=False,
+        help="instrument core locks with the repro.analysis.lockcheck "
+             "lockdep detector; the session fails if any ordering or "
+             "notify-under-lock hazards are recorded")
+
+
+def pytest_configure(config):
+    if config.getoption("--lockcheck"):
+        # enable BEFORE collection imports repro.core: locks are plain or
+        # instrumented at construction time, so the detector must be on
+        # before any Device/engine objects exist
+        from repro.analysis import lockcheck
+
+        lockcheck.enable()
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if not config.getoption("--lockcheck"):
+        return
+    from repro.analysis import lockcheck
+
+    terminalreporter.section("lockcheck")
+    terminalreporter.write_line(lockcheck.report())
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not session.config.getoption("--lockcheck"):
+        return
+    from repro.analysis import lockcheck
+
+    if lockcheck.violations() and exitstatus == 0:
+        session.exitstatus = 1

@@ -1,0 +1,204 @@
+"""Seeded-bug fixtures proving each apilint rule fires (and only on the
+bug), plus suppression-comment and CLI behavior."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import apilint
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _codes(src):
+    return [v.code for v in apilint.lint_source(textwrap.dedent(src))]
+
+
+# --------------------------------------------------------------------------- DSA101
+def test_dsa101_dropped_future_fires():
+    assert _codes("""
+        def f(dev, buf):
+            dev.submit(buf)
+    """) == ["DSA101"]
+
+
+def test_dsa101_async_helper_fires():
+    assert _codes("""
+        def f(dev, buf):
+            dev.memcpy_async(buf)
+    """) == ["DSA101"]
+
+
+def test_dsa101_bound_future_clean():
+    assert _codes("""
+        def f(dev, buf):
+            fut = dev.submit(buf)
+            return fut.result()
+    """) == []
+
+
+# --------------------------------------------------------------------------- DSA102
+def test_dsa102_blocking_result_in_lambda_callback():
+    assert _codes("""
+        def f(dev, fut, other):
+            fut.add_done_callback(lambda _: other.result())
+    """) == ["DSA102"]
+
+
+def test_dsa102_blocking_wait_in_named_callback():
+    assert _codes("""
+        def f(dev, fut, other):
+            def on_done(_):
+                dev.wait_all([other])
+            fut.then(on_done)
+    """) == ["DSA102"]
+
+
+def test_dsa102_zero_timeout_poll_is_exempt():
+    assert _codes("""
+        def f(dev, fut, other):
+            fut.add_done_callback(lambda _: other.wait(timeout=0))
+    """) == []
+
+
+def test_dsa102_blocking_outside_callback_clean():
+    assert _codes("""
+        def f(dev, fut):
+            return fut.result()
+    """) == []
+
+
+# --------------------------------------------------------------------------- DSA103
+def test_dsa103_raw_kick_loop_fires():
+    assert _codes("""
+        def f(dev, rec):
+            while not rec.is_done():
+                dev.kick()
+    """) == ["DSA103"]
+
+
+def test_dsa103_wait_policy_clean():
+    assert _codes("""
+        def f(dev, futs):
+            dev.wait_all(futs)
+    """) == []
+
+
+# --------------------------------------------------------------------------- DSA104
+def test_dsa104_swallowed_queuefull_fires():
+    assert _codes("""
+        def f(dev, buf):
+            try:
+                fut = dev.submit(buf)
+            except Exception:
+                pass
+    """) == ["DSA104"]
+
+
+def test_dsa104_bare_except_fires():
+    assert _codes("""
+        def f(dev, buf):
+            try:
+                fut = dev.submit(buf)
+            except:
+                return None
+    """) == ["DSA104"]
+
+
+def test_dsa104_handler_naming_queuefull_clean():
+    assert _codes("""
+        def f(dev, buf, QueueFull):
+            try:
+                fut = dev.submit(buf)
+            except QueueFull:
+                return None
+    """) == []
+
+
+def test_dsa104_broad_handler_reraising_clean():
+    assert _codes("""
+        def f(dev, buf):
+            try:
+                fut = dev.submit(buf)
+            except Exception:
+                raise
+    """) == []
+
+
+# --------------------------------------------------------------------------- suppression
+def test_suppression_comment_single_code():
+    assert _codes("""
+        def f(dev, buf):
+            dev.submit(buf)  # dsalint: disable=DSA101
+    """) == []
+
+
+def test_suppression_comment_all_codes():
+    assert _codes("""
+        def f(dev, rec):
+            while not rec.is_done():  # dsalint: disable
+                dev.kick()
+    """) == []
+
+
+def test_suppression_of_other_code_does_not_mask():
+    assert _codes("""
+        def f(dev, buf):
+            dev.submit(buf)  # dsalint: disable=DSA103
+    """) == ["DSA101"]
+
+
+# --------------------------------------------------------------------------- entry points / CLI
+def test_lint_source_reports_position_and_message():
+    vs = apilint.lint_source("def f(d, b):\n    d.submit(b)\n", path="x.py")
+    assert len(vs) == 1
+    v = vs[0]
+    assert (v.path, v.line, v.code) == ("x.py", 2, "DSA101")
+    assert "discarded" in v.message
+    assert str(v).startswith("x.py:2:")
+
+
+def test_lint_paths_walks_trees(tmp_path):
+    (tmp_path / "pkg").mkdir()
+    (tmp_path / "pkg" / "bad.py").write_text("def f(d, b):\n    d.submit(b)\n")
+    (tmp_path / "pkg" / "ok.py").write_text("x = 1\n")
+    vs = apilint.lint_paths([tmp_path])
+    assert [v.code for v in vs] == ["DSA101"]
+
+
+def test_select_filters_rules():
+    src = "def f(d, b, r):\n    d.submit(b)\n    while not r.is_done():\n        d.kick()\n"
+    assert [v.code for v in apilint.lint_source(src, select=["DSA103"])] == [
+        "DSA103"]
+
+
+def test_syntax_error_reported_not_raised():
+    vs = apilint.lint_source("def f(:\n")
+    assert vs[0].code == "DSA100"
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(d, b):\n    d.submit(b)\n")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "dsalint.py"), str(bad)],
+        capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "DSA101" in r.stdout
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "dsalint.py"), str(good)],
+        capture_output=True, text=True)
+    assert r.returncode == 0
+
+
+def test_repo_tree_is_clean():
+    """The ratchet: the repo's own source must stay dsalint-clean."""
+    paths = [ROOT / p for p in
+             ("src", "tests", "benchmarks", "examples", "tools")
+             if (ROOT / p).exists()]
+    vs = apilint.lint_paths(paths)
+    assert vs == [], "\n".join(str(v) for v in vs)

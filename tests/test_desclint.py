@@ -1,0 +1,221 @@
+"""Descriptor validity checking (repro.analysis.desclint) and the
+make_device(validate=) submit-time wiring.
+
+One strict-mode test per malformed-descriptor family (fill / compare /
+delta / DIF / batch) asserting the SPECIFIC typed error and code, plus
+warn-mode counter assertions surfaced through the obs Sampler, locality
+checks against the buffer registry, and the WorkDescriptor.nbytes
+degenerate-input regressions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import desclint
+from repro.analysis.desclint import (
+    DescriptorError,
+    IndexShapeError,
+    LocalityError,
+    MissingOperandError,
+    OperandMismatchError,
+)
+from repro.core import make_device
+from repro.core.descriptor import BatchDescriptor, CacheHint, OpType, WorkDescriptor
+from repro.core.topology import Topology
+from repro.obs import Sampler
+
+
+@pytest.fixture
+def strict():
+    return make_device(validate="strict")
+
+
+def _arr(n=64, dtype=jnp.float32):
+    return jnp.arange(n, dtype=jnp.int32).astype(dtype)
+
+
+# --------------------------------------------------------------------------- strict: five op families
+def test_strict_fill_missing_pattern(strict):
+    with pytest.raises(MissingOperandError) as ei:
+        _ = strict.submit(WorkDescriptor(op=OpType.FILL, n_words=0))
+    assert ei.value.code == "DESC101"
+    assert any(d.code == "DESC101" for d in ei.value.diagnostics)
+
+
+def test_strict_compare_shape_mismatch(strict):
+    with pytest.raises(OperandMismatchError) as ei:
+        _ = strict.submit(WorkDescriptor(op=OpType.COMPARE,
+                                     src=_arr(64), src2=_arr(32)))
+    assert ei.value.code == "DESC102"
+
+
+def test_strict_compare_dtype_mismatch(strict):
+    with pytest.raises(OperandMismatchError):
+        _ = strict.submit(WorkDescriptor(op=OpType.COMPARE,
+                                     src=_arr(64, jnp.float32),
+                                     src2=_arr(64, jnp.int32)))
+
+
+def test_strict_delta_bad_cap_and_ref(strict):
+    # family check: ref/src disagreement is DESC102...
+    with pytest.raises(OperandMismatchError) as ei:
+        _ = strict.submit(WorkDescriptor(op=OpType.DELTA_CREATE,
+                                     src=_arr(64), src2=_arr(128), cap=16))
+    assert ei.value.code == "DESC102"
+    # ...and so is a nonsensical capacity
+    with pytest.raises(OperandMismatchError):
+        _ = strict.submit(WorkDescriptor(op=OpType.DELTA_CREATE,
+                                     src=_arr(64), src2=_arr(64), cap=0))
+    # missing reference entirely is the DESC101 family
+    with pytest.raises(MissingOperandError):
+        _ = strict.submit(WorkDescriptor(op=OpType.DELTA_CREATE,
+                                     src=_arr(64), cap=16))
+
+
+def test_strict_dif_wrong_dtype_and_framing(strict):
+    words = jnp.arange(256, dtype=jnp.uint32)
+    # wrong word dtype
+    with pytest.raises(OperandMismatchError) as ei:
+        _ = strict.submit(WorkDescriptor(op=OpType.DIF_INSERT,
+                                     src=_arr(256, jnp.float32)))
+    assert ei.value.code == "DESC102"
+    # dif_check wants framed 2-D blocks, not a flat stream
+    with pytest.raises(OperandMismatchError):
+        _ = strict.submit(WorkDescriptor(op=OpType.DIF_CHECK, src=words))
+
+
+def test_strict_batch_copy_index_shape(strict):
+    pool = jnp.zeros((8, 32), jnp.float32)
+    with pytest.raises(IndexShapeError) as ei:
+        _ = strict.submit(WorkDescriptor(
+            op=OpType.BATCH_COPY, src=pool, dst_pool=pool,
+            src_idx=jnp.arange(4), dst_idx=jnp.arange(3)))
+    assert ei.value.code == "DESC103"
+    # missing dst_pool is the DESC101 family
+    with pytest.raises(MissingOperandError):
+        _ = strict.submit(WorkDescriptor(
+            op=OpType.BATCH_COPY, src=pool,
+            src_idx=jnp.arange(4), dst_idx=jnp.arange(4)))
+
+
+def test_strict_locality_conflict():
+    topo = Topology.symmetric(2, engines_per_node=1)
+    dev = make_device(topology=topo, validate="strict")
+    buf = jnp.ones((64,), jnp.float32)
+    dev.register(buf, node=1)
+    # explicit stamp contradicting the registry
+    with pytest.raises(LocalityError) as ei:
+        _ = dev.submit(WorkDescriptor(op=OpType.MEMCPY, src=buf, src_node=0))
+    assert ei.value.code == "DESC104"
+    # node hint outside the topology
+    with pytest.raises(LocalityError):
+        _ = dev.submit(WorkDescriptor(op=OpType.MEMCPY,
+                                  src=jnp.ones((8,), jnp.float32),
+                                  src_node=7))
+
+
+def test_strict_clean_descriptors_pass(strict):
+    buf = _arr(128)
+    assert strict.memcpy(buf).shape == buf.shape
+    rec = strict.submit(WorkDescriptor(op=OpType.COMPARE,
+                                       src=buf, src2=buf)).result()
+    strict.drain()
+
+
+# --------------------------------------------------------------------------- warn mode + sampler
+def test_warn_mode_counts_instead_of_raising():
+    dev = make_device()  # validate="warn" is the default
+    assert dev.validate == "warn"
+    fut = dev.submit(WorkDescriptor(op=OpType.COMPARE,
+                                    src=_arr(64), src2=_arr(32)))
+    assert dev.policy_stats["desclint_warnings"] >= 1
+    dev.drain()
+
+
+def test_warn_counter_surfaces_in_sampler_series():
+    dev = make_device()
+    sampler = Sampler(dev)
+    sampler.tick()
+    before = dev.policy_stats["desclint_warnings"]
+    _ = dev.submit(WorkDescriptor(op=OpType.COMPARE, src=_arr(64), src2=_arr(32)))
+    dev.drain()
+    sampler.tick()
+    emitted = dev.policy_stats["desclint_warnings"] - before
+    assert emitted >= 1
+    assert sampler.series["device.desclint_warnings"].sum() == emitted
+    # a clean tick records a zero delta, not a repeat
+    sampler.tick()
+    assert sampler.series["device.desclint_warnings"].sum() == emitted
+
+
+def test_validate_off_skips_checks():
+    dev = make_device(validate="off")
+    _ = dev.submit(WorkDescriptor(op=OpType.COMPARE, src=_arr(64), src2=_arr(32)))
+    assert dev.policy_stats["desclint_warnings"] == 0
+    dev.drain()
+
+
+def test_validate_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        make_device(validate="loud")
+
+
+# --------------------------------------------------------------------------- batch homogeneity (DESC105)
+def test_batch_homogeneity_warning_is_warn_severity():
+    a = jnp.ones((64,), jnp.float32)
+    b = jnp.ones((32,), jnp.float32)
+    batch = BatchDescriptor(descriptors=[
+        WorkDescriptor(op=OpType.MEMCPY, src=a, cache_hint=CacheHint.TO_CACHE),
+        WorkDescriptor(op=OpType.MEMCPY, src=b, cache_hint=CacheHint.TO_MEMORY),
+    ])
+    diags = desclint.check(batch)
+    codes = {d.code for d in diags}
+    assert "DESC105" in codes
+    assert all(d.severity == "warn" for d in diags if d.code == "DESC105")
+    # strict mode does NOT raise for warn-only findings, it counts them
+    dev = make_device(validate="strict")
+    dev.wait(dev.submit(batch))
+    assert dev.policy_stats["desclint_warnings"] >= 1
+
+
+def test_homogeneous_batch_is_clean():
+    a = jnp.ones((64,), jnp.float32)
+    batch = BatchDescriptor(descriptors=[
+        WorkDescriptor(op=OpType.MEMCPY, src=a),
+        WorkDescriptor(op=OpType.MEMCPY, src=a),
+    ])
+    assert desclint.check(batch) == []
+
+
+# --------------------------------------------------------------------------- nbytes regressions (satellite)
+def test_nbytes_empty_batch_copy_returns_zero():
+    d = WorkDescriptor(op=OpType.BATCH_COPY,
+                       src=np.zeros((0, 16), np.float32),
+                       dst_pool=np.zeros((4, 16), np.float32),
+                       src_idx=np.arange(0), dst_idx=np.arange(0))
+    assert d.nbytes == 0  # was: ZeroDivisionError
+    assert any(x.code == "DESC106" for x in desclint.check(d))
+
+
+def test_nbytes_batch_copy_missing_index_returns_zero():
+    d = WorkDescriptor(op=OpType.BATCH_COPY,
+                       src=np.zeros((4, 16), np.float32))
+    assert d.nbytes == 0  # was: AttributeError on src_idx=None
+
+
+def test_nbytes_dtypeless_operand_returns_zero():
+    class Duck:
+        size = 64
+        shape = (64,)
+
+    d = WorkDescriptor(op=OpType.MEMCPY, src=Duck())
+    assert d.nbytes == 0  # was: AttributeError on .dtype
+    assert any(x.code == "DESC102" for x in desclint.check(d))
+
+
+def test_nbytes_normal_paths_unchanged():
+    src = np.zeros((4, 16), np.float32)
+    d = WorkDescriptor(op=OpType.BATCH_COPY, src=src, dst_pool=src.copy(),
+                       src_idx=np.arange(2), dst_idx=np.arange(2))
+    assert d.nbytes == 2 * 16 * 4
+    assert WorkDescriptor(op=OpType.FILL, pattern=np.uint32(7),
+                          n_words=10).nbytes == 40

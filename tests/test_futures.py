@@ -175,7 +175,7 @@ def test_least_loaded_avoids_hot_instance():
     hot, cold = d.engines
     # preload the hot instance's WQ without kicking (raw portal writes)
     for _ in range(4):
-        hot.wq(0, 0).submit(_desc())
+        hot.wq(0, 0).submit(_desc())  # dsalint: disable=DSA101 — raw WQ submit returns Status
     placed = LeastLoadedPolicy().select(d.engines, _desc(), None)
     assert placed is cold
     fut = d.memcpy_async(jnp.zeros((8, 128), jnp.float32))
@@ -208,10 +208,10 @@ def test_get_policy_validates():
 def test_queue_full_after_bounded_backoff():
     d = _stalled_device(wq_size=2, max_retries=3)
     x = jnp.zeros((8, 128), jnp.float32)
-    d.memcpy_async(x)
-    d.memcpy_async(x)  # WQ now full; no PEs will ever drain it
+    _ = d.memcpy_async(x)
+    _ = d.memcpy_async(x)  # WQ now full; no PEs will ever drain it
     with pytest.raises(QueueFull) as ei:
-        d.memcpy_async(x)
+        _ = d.memcpy_async(x)
     assert ei.value.attempts == 4  # initial try + max_retries backoffs
     assert d.policy_stats["queue_full"] == 1
     assert d.policy_stats["backoff_retries"] >= 3
@@ -239,9 +239,9 @@ def test_fence_list_is_bounded():
     gate = d.promise()
     x = jnp.zeros((8, 128), jnp.float32)
     for _ in range(3):
-        d.memcpy_async(x, after=[gate])
+        _ = d.memcpy_async(x, after=[gate])
     with pytest.raises(QueueFull):
-        d.memcpy_async(x, after=[gate])
+        _ = d.memcpy_async(x, after=[gate])
     assert len(eng._deferred) == 3
     gate.set_result(None)
     d.drain()
@@ -262,7 +262,7 @@ def test_shared_device_across_threads(rng):
             for _ in range(20):
                 assert np.allclose(np.asarray(d.memcpy_async(x).result()),
                                    np.asarray(x))
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # noqa: BLE001  # dsalint: disable=DSA104 — errors collected and asserted below
             errors.append(e)
 
     threads = [threading.Thread(target=worker) for _ in range(2)]

@@ -1,0 +1,250 @@
+"""The lockdep-style runtime detector (repro.analysis.lockcheck):
+acquisition-order cycle detection, notify-under-lock hazards, and the
+crafted pre-PR-7 ReorderArray fixture that the detector must flag while
+the current (fixed) pattern stays clean.
+
+Tests build PRIVATE LockCheck instances so the global detector (the one
+``pytest --lockcheck`` fails the session on) never sees the deliberate
+hazards manufactured here."""
+import threading
+from collections import deque
+
+from repro.analysis.lockcheck import CheckedLock, LockCheck
+
+
+# --------------------------------------------------------------------------- ordering
+def test_abba_inversion_flagged_single_thread():
+    lc = LockCheck()
+    a, b = lc.lock("A"), lc.lock("B")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:  # second ordering observed -> cycle, no deadlock needed
+            pass
+    kinds = [v.kind for v in lc.violations]
+    assert kinds == ["order-cycle"]
+    assert "A" in lc.violations[0].detail and "B" in lc.violations[0].detail
+
+
+def test_abba_inversion_flagged_across_threads():
+    lc = LockCheck()
+    a, b = lc.lock("A"), lc.lock("B")
+    barrier = threading.Barrier(2)
+
+    def t1():
+        with a:
+            barrier.wait()
+            # don't actually take b (that could truly deadlock); the order
+            # edge A->B was already recorded below
+        barrier.wait()
+
+    def t2():
+        barrier.wait()  # t1 holds a
+        barrier.wait()
+        with b:
+            with a:
+                pass
+
+    with a:
+        with b:
+            pass  # record A -> B
+    ths = [threading.Thread(target=f) for f in (t1, t2)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    assert any(v.kind == "order-cycle" for v in lc.violations)
+
+
+def test_consistent_order_is_clean():
+    lc = LockCheck()
+    a, b = lc.lock("A"), lc.lock("B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert lc.violations == []
+    assert lc.edges() == {"A": {"B"}}
+
+
+def test_same_class_nesting_flagged():
+    lc = LockCheck()
+    w1, w2 = lc.lock("wq"), lc.lock("wq")  # two instances, one class
+    with w1:
+        with w2:
+            pass
+    assert [v.kind for v in lc.violations] == ["order-cycle"]
+    assert "same-class" in lc.violations[0].detail
+
+
+def test_reentrant_rlock_reacquire_clean():
+    lc = LockCheck()
+    r = lc.rlock("reorder")
+    with r:
+        with r:  # same INSTANCE: tracked, not edge-recorded
+            assert lc.held() == ["reorder"]
+    assert lc.violations == []
+
+
+def test_duplicate_violations_deduplicated():
+    lc = LockCheck()
+    a, b = lc.lock("A"), lc.lock("B")
+    with a:
+        with b:
+            pass
+    for _ in range(5):
+        with b:
+            with a:
+                pass
+    assert len(lc.violations) == 1
+
+
+# --------------------------------------------------------------------------- notify regions
+def test_notify_region_clean_when_unlocked():
+    lc = LockCheck()
+    with lc.notify_region("callbacks"):
+        pass
+    assert lc.violations == []
+
+
+def test_notify_region_flags_held_lock():
+    lc = LockCheck()
+    eng = lc.lock("engine")
+    with eng:
+        with lc.notify_region("callbacks"):
+            pass
+    vs = lc.violations
+    assert [v.kind for v in vs] == ["notify-under-lock"]
+    assert "engine" in vs[0].detail and "callbacks" in vs[0].detail
+
+
+# --------------------------------------------------------------------------- factories
+def test_disabled_detector_returns_plain_locks():
+    lc = LockCheck(enabled=False)
+    assert not isinstance(lc.lock("x"), CheckedLock)
+    assert not isinstance(lc.rlock("x"), CheckedLock)
+    # and plain locks still work as locks
+    with lc.lock("x"):
+        pass
+
+
+def test_global_factories_follow_enable_state():
+    from repro.analysis import lockcheck as L
+
+    was = L.enabled()
+    try:
+        L.disable()
+        assert not isinstance(L.checked_lock("t"), CheckedLock)
+        L.enable()
+        lk = L.checked_lock("t")
+        assert isinstance(lk, CheckedLock)
+        assert lk._check is L.GLOBAL
+    finally:
+        L.GLOBAL.enabled = was
+
+
+def test_report_format():
+    lc = LockCheck()
+    assert "clean" in lc.report()
+    a, b = lc.lock("A"), lc.lock("B")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    rep = lc.report()
+    assert "1 violation" in rep and "order-cycle" in rep
+
+
+# --------------------------------------------------------------------------- the PR 7 bug class
+class _PumpingFuture:
+    """Pre-PR-7 future shape: ``is_done()`` PUMPS the engine, which
+    dispatches completion listeners right there — inside whatever lock the
+    caller happens to hold."""
+
+    def __init__(self, lc, done=True):
+        self._lc = lc
+        self._done = done
+
+    def is_done(self):
+        with self._lc.notify_region("engine.listeners"):
+            pass  # listener dispatch happens HERE, inside the caller's lock
+        return self._done
+
+
+class _PassiveFuture:
+    """Current-tree future shape: ``is_done()`` only reads the record; the
+    wait-policy loop dispatches callbacks outside any subsystem lock."""
+
+    def __init__(self, done=True):
+        self._done = done
+
+    def is_done(self):
+        return self._done
+
+
+def _reorder_drain(lc, futures):
+    """The ReorderArray commit loop, reduced: pop the completed prefix
+    while holding the reorder lock (exactly what pop_completed does)."""
+    lock = lc.rlock("serving.reorder")
+    entries = deque((i, f) for i, f in enumerate(futures))
+    out = []
+    with lock:
+        while entries:
+            tag, fut = entries[0]
+            if not fut.is_done():
+                break
+            entries.popleft()
+            out.append(tag)
+    return out
+
+
+def test_lockcheck_reproduces_pre_pr7_reorder_hazard():
+    """On the pre-PR-7 pattern — engine-pumping is_done() under the reorder
+    lock — the detector flags the held-lock-listener-dispatch hazard that
+    had to be found by hand back then."""
+    lc = LockCheck()
+    committed = _reorder_drain(lc, [_PumpingFuture(lc) for _ in range(3)])
+    assert committed == [0, 1, 2]
+    vs = lc.violations
+    assert any(v.kind == "notify-under-lock" for v in vs)
+    v = next(v for v in vs if v.kind == "notify-under-lock")
+    assert "serving.reorder" in v.detail and "engine.listeners" in v.detail
+
+
+def test_current_reorder_pattern_is_clean():
+    """The fixed pattern — passive is_done() under the lock, callback
+    dispatch outside it (wait_any's notify path) — records nothing."""
+    lc = LockCheck()
+    committed = _reorder_drain(lc, [_PassiveFuture() for _ in range(3)])
+    # dispatch happens after the lock is released:
+    with lc.notify_region("engine.listeners"):
+        pass
+    assert committed == [0, 1, 2]
+    assert lc.violations == []
+
+
+def test_current_serving_reorder_array_is_clean():
+    """End-to-end on the REAL ReorderArray: drive push/pop_completed with
+    a private detector substituted for its lock; the current implementation
+    must not trip notify-under-lock or ordering hazards."""
+    from repro.serving.pipeline import ReorderArray
+
+    lc = LockCheck()
+    ra = ReorderArray(size=8)
+    ra._lock = lc.rlock("serving.reorder")
+    futs = [_PassiveFuture(done=False) for _ in range(4)]
+    for i, f in enumerate(futs):
+        ra.push(i, f, payload=f"p{i}")
+    assert ra.pop_completed() == []
+    for f in futs[:2]:
+        f._done = True
+    assert [t for t, _ in ra.pop_completed()] == [0, 1]
+    with lc.notify_region("engine.listeners"):
+        pass
+    for f in futs:
+        f._done = True
+    assert [t for t, _ in ra.pop_completed()] == [2, 3]
+    assert lc.violations == []

@@ -52,6 +52,31 @@ def check_bytecode() -> int:
     return 0
 
 
+def check_dsalint() -> int:
+    """Run the repro.analysis.apilint rules over every GIT-TRACKED python
+    file — the ratchet that keeps Future/Device API misuse (dropped
+    futures, raw kick() loops, swallowed QueueFull) out of the tree.  Same
+    git-scoped rationale as check_bytecode: scratch files in the working
+    tree are not the defect, committed ones are."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.analysis import apilint
+
+    try:
+        tracked = subprocess.run(
+            ["git", "ls-files", "*.py"], cwd=ROOT, check=True,
+            capture_output=True, text=True).stdout.splitlines()
+    except (OSError, subprocess.CalledProcessError) as e:
+        print(f"note dsalint check skipped (git unavailable: {e})")
+        return 0
+    violations = apilint.lint_paths([ROOT / f for f in tracked])
+    for v in violations:
+        print(f"FAIL {v}", file=sys.stderr)
+    if violations:
+        return len(violations)
+    print(f"ok   dsalint clean over {len(tracked)} tracked python files")
+    return 0
+
+
 def doc_files() -> list[Path]:
     files = [ROOT / "README.md"]
     files += sorted((ROOT / "docs").glob("*.md"))
@@ -81,6 +106,7 @@ def check_file(path: Path) -> int:
 
 def main() -> int:
     failures = check_bytecode()  # repo hygiene first: cheap and unambiguous
+    failures += check_dsalint()
     files = doc_files()
     if not files:
         print("no documentation files found", file=sys.stderr)
