@@ -25,6 +25,12 @@ fine, run fine in the small, and rot a real deployment:
                                 ``Exception`` handler neither re-raises nor
                                 names ``QueueFull`` — overload becomes
                                 silent data loss instead of backpressure.
+  DSA105  trace-rate            a literal ``trace=`` / ``rate=`` sampling
+                                rate outside [0, 1] at a ``make_device`` /
+                                ``Device`` / ``TraceConfig`` call site.
+                                The runtime rejects it too (the typed
+                                ``TraceRateError``), but the lint catches
+                                it before anything runs.
 
 Suppression: append ``# dsalint: disable`` (all rules) or
 ``# dsalint: disable=DSA103`` / ``=DSA101,DSA104`` to the offending line.
@@ -50,6 +56,15 @@ RULES: Dict[str, str] = {
               "instead of a WaitPolicy",
     "DSA104": "swallowed-queuefull: submit inside a bare/Exception handler "
               "that neither re-raises nor handles QueueFull",
+    "DSA105": "trace-rate: literal trace=/rate= sampling rate outside "
+              "[0, 1] at a make_device/Device/TraceConfig call site",
+}
+
+#: callee name -> keyword carrying a sampling rate in [0, 1] (DSA105)
+TRACE_RATE_KWARGS: Dict[str, str] = {
+    "make_device": "trace",
+    "Device": "trace",
+    "TraceConfig": "rate",
 }
 
 #: Device/engine methods whose return value is a Future (or a completion
@@ -120,6 +135,32 @@ def _is_zero_timeout(call: ast.Call) -> bool:
     return False
 
 
+def _callee_name(call: ast.Call) -> Optional[str]:
+    """Bare or dotted callee name: ``make_device(...)`` / ``m.Device(...)``."""
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def _const_number(node: ast.AST) -> Optional[float]:
+    """The numeric value of a literal, seeing through unary +/- (a negative
+    literal like ``-0.5`` parses as UnaryOp(USub, Constant), not Constant).
+    Bools are excluded — ``trace=True`` means rate 1.0 and is always legal."""
+    sign = 1.0
+    while isinstance(node, ast.UnaryOp) and isinstance(
+            node.op, (ast.UAdd, ast.USub)):
+        if isinstance(node.op, ast.USub):
+            sign = -sign
+        node = node.operand
+    if (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and not isinstance(node.value, bool)):
+        return sign * float(node.value)
+    return None
+
+
 class _Linter(ast.NodeVisitor):
     def __init__(self, path: str, source: str):
         self.path = path
@@ -156,13 +197,30 @@ class _Linter(ast.NodeVisitor):
                        f"its completion record) leaks; bind it or wait on it")
         self.generic_visit(node)
 
-    # ------------------------------------------------------------------ DSA102
+    # ------------------------------------------------------------------ DSA102 / DSA105
     def visit_Call(self, node: ast.Call) -> None:
         attr = _call_attr(node)
         if attr in CALLBACK_REGISTRARS:
             for arg in list(node.args) + [kw.value for kw in node.keywords]:
                 self._check_callback_body(arg)
+        self._check_trace_rate(node)
         self.generic_visit(node)
+
+    def _check_trace_rate(self, node: ast.Call) -> None:
+        callee = _callee_name(node)
+        kwarg = TRACE_RATE_KWARGS.get(callee or "")
+        if kwarg is None:
+            return
+        for kw in node.keywords:
+            if kw.arg != kwarg:
+                continue
+            value = _const_number(kw.value)
+            if value is not None and not (0.0 <= value <= 1.0):
+                self._emit(kw.value, "DSA105",
+                           f"sampling rate {kwarg}={value:g} passed to "
+                           f"'{callee}' is outside [0, 1] — the runtime "
+                           f"raises TraceRateError; use a fraction of "
+                           f"descriptors to sample")
 
     def _check_callback_body(self, arg: ast.AST) -> None:
         body: Optional[ast.AST] = None

@@ -80,6 +80,21 @@ class WaitStats:
         total = self.busy_s + self.free_s
         return self.free_s / total if total > 0 else 0.0
 
+    def merge(self, other: "WaitStats") -> "WaitStats":
+        """Fold another WaitStats in (each WaitPolicy.wait bills a local
+        instance, merged into the device's per-policy bucket at the end —
+        totals identical to incremental billing, and the same numbers feed
+        the tracer's wait span, so both views always reconcile)."""
+        self.waits += other.waits
+        self.polls += other.polls
+        self.wakes += other.wakes
+        self.irqs += other.irqs
+        self.completions += other.completions
+        self.busy_s += other.busy_s
+        self.free_s += other.free_s
+        self.modeled_overhead_s += other.modeled_overhead_s
+        return self
+
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["host_free_frac"] = self.host_free_frac
@@ -170,9 +185,13 @@ class WaitPolicy:
     def wait(self, device, sink: CompletionSet,
              satisfied: Callable[[], bool],
              timeout: Optional[float] = None) -> bool:
-        stats = device._wait_bucket(self.name)
-        stats.waits += 1
-        deadline = None if timeout is None else time.perf_counter() + timeout
+        # bill into a LOCAL WaitStats, folded into the device's per-policy
+        # bucket once on exit: totals are preserved exactly (Fig. 11
+        # unchanged) and the tracer records this wait's busy/free split as
+        # one wait span from the same numbers
+        stats = WaitStats(waits=1)
+        t_begin = time.perf_counter()
+        deadline = None if timeout is None else t_begin + timeout
         try:
             while True:  # dsalint: disable=DSA103 — WaitPolicy internals ARE the sanctioned pump
                 t0 = time.perf_counter()
@@ -187,6 +206,12 @@ class WaitPolicy:
                 self._idle(device, stats, deadline)
         finally:
             stats.completions += sink.take_delivered()
+            device._wait_bucket(self.name).merge(stats)
+            tracer = getattr(device, "tracer", None)
+            if tracer is not None:
+                tracer.wait_span(self.name, t_begin, time.perf_counter(),
+                                 stats.busy_s, stats.free_s,
+                                 stats.completions)
 
     def _idle(self, device, stats: WaitStats, deadline: Optional[float]):
         raise NotImplementedError

@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
+import time
 from typing import Any, Optional, Sequence, Tuple
 
 
@@ -73,6 +74,10 @@ class WorkDescriptor:
     # metadata
     desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     priority: int = 0
+    # allocation timestamp: start of the lifecycle "create" span when the
+    # descriptor is traced (repro.obs.trace)
+    created_t: float = dataclasses.field(default_factory=time.perf_counter,
+                                         repr=False, compare=False)
 
     @property
     def nbytes(self) -> int:
@@ -110,6 +115,8 @@ class BatchDescriptor:
     dst_node: Optional[int] = None
     desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     priority: int = 0
+    created_t: float = dataclasses.field(default_factory=time.perf_counter,
+                                         repr=False, compare=False)
 
     @property
     def nbytes(self) -> int:
@@ -138,9 +145,20 @@ class CompletionRecord:
     src_node: int = 0
     dst_node: int = 0
     link_hops: int = 0
+    # lifecycle trace (repro.obs.spans.DescTrace) when the submission was
+    # sampled; every resolve/observe path checks ``is not None`` only, so
+    # untraced records pay a single attribute read
+    trace: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     def is_done(self) -> bool:
         return self.status in (Status.SUCCESS, Status.ERROR, Status.OVERFLOW)
+
+
+def next_desc_id() -> int:
+    """Allocate a fresh descriptor id from the shared counter (used for
+    synthetic records — e.g. traced ``then`` continuations — that must be
+    addressable in the trace DAG alongside real descriptors)."""
+    return next(_ids)
 
 
 def op_name(desc) -> str:

@@ -45,6 +45,7 @@ from repro.core.descriptor import (
     OpType,
     Status,
     WorkDescriptor,
+    next_desc_id,
     op_name,
 )
 from repro.core.engine import DeviceConfig, StreamEngine
@@ -106,6 +107,16 @@ class Future:
     @property
     def steering(self) -> Optional[str]:
         return self.record.steering
+
+    # -- lifecycle trace (repro.obs; None when the submission was not sampled)
+    @property
+    def trace(self) -> Optional[Any]:
+        return self.record.trace
+
+    @property
+    def trace_id(self) -> Optional[str]:
+        tr = self.record.trace
+        return tr.trace_id if tr is not None else None
 
     def done(self) -> bool:
         """Non-kicking completion check."""
@@ -185,12 +196,22 @@ class Future:
                 return
             self._fired = True
             callbacks, self._callbacks = self._callbacks, []
+        tr = self.record.trace
+        if tr is not None:
+            # first observation of the completion by the host: ends the
+            # host_wait span (exactly-once, guarded by _fired above)
+            tr.mark("observed")
+            t_cb = tr.mark("cb0")
         if callbacks:
             # user code runs strictly outside _cb_lock; lockcheck verifies
             # no OTHER instrumented lock is held at this dispatch point
             with _lockcheck.notify_region("future.fire_callbacks"):
                 for fn in callbacks:
                     fn(self)
+        if tr is not None:
+            # no callbacks -> zero-length span at t_cb, so exports always
+            # carry the full phase set
+            tr.mark("cb1", None if callbacks else t_cb)
 
 
 class ChainedFuture(Future):
@@ -204,10 +225,22 @@ class ChainedFuture(Future):
         super().__init__(parent.device, None, rec)
         self.parent = parent
         self.fn = fn
+        # trace propagation: a continuation of a traced parent gets its own
+        # node (fresh desc_id) under the parent's trace id, linked by a
+        # "then" edge the critical-path analyzer walks
+        tracer = getattr(parent.device, "tracer", None)
+        ptr = parent.record.trace
+        if tracer is not None and ptr is not None:
+            rec.desc_id = next_desc_id()
+            rec.trace = tracer.begin_host(ptr.trace_id, rec.desc_id, rec.op)
+            tracer.edge(parent.record.desc_id, rec.desc_id, "then")
 
     def _resolve(self):
         if self.record.is_done():
             return
+        tr = self.record.trace
+        if tr is not None:
+            tr.mark("exec0")
         if self.parent.record.status == Status.ERROR:
             self.record.status = Status.ERROR
             self.record.error = self.parent.record.error or "parent failed"
@@ -218,6 +251,9 @@ class ChainedFuture(Future):
             except Exception as e:  # noqa: BLE001
                 self.record.status = Status.ERROR
                 self.record.error = f"{type(e).__name__}: {e}"
+        if tr is not None:
+            tr.mark("exec1")
+            tr.mark("resolved")
         if self.device is not None:
             self.device._on_future_done(self)  # deliver to completion sets
 
@@ -431,10 +467,21 @@ class Device:
                  wq_configs: Optional[Sequence[WQConfig]] = None,
                  pes_per_group: int = 4,
                  max_retries: int = 10, backoff_base_s: float = 20e-6,
-                 validate: str = "warn"):
+                 validate: str = "warn",
+                 trace: Any = None):
         if validate not in ("strict", "warn", "off"):
             raise ValueError(f"validate must be 'strict', 'warn', or 'off', "
                              f"got {validate!r}")
+        # opt-in descriptor-lifecycle tracing (repro.obs.trace): None/False
+        # off (the default — submit pays one attribute check), True/rate/
+        # TraceConfig/Tracer on.  Lazy import keeps core free of obs at
+        # module scope; a rate outside [0, 1] raises TraceRateError here.
+        if trace is None:
+            self.tracer = None
+        else:
+            from repro.obs.trace import make_tracer
+
+            self.tracer = make_tracer(trace)
         # submit-time descriptor validation mode (repro.analysis.desclint):
         # strict raises the typed DescriptorError taxonomy, warn bumps the
         # desclint_warnings counter, off skips the checks
@@ -630,9 +677,25 @@ class Device:
                 wq = cls_wq
             if priority is None and wq is None:
                 priority = getattr(cls, "priority", None)
+        tracer = self.tracer
+        trace = tracer.begin(desc) if tracer is not None else None
         self._stamp_locality(desc, node)
+        if trace is not None:
+            if producer is not None:
+                trace.attrs["producer"] = producer
+            if slo is not None:
+                trace.attrs["slo"] = slo
+            if after:
+                for dep in after:
+                    dep_rec = getattr(dep, "record", dep)
+                    dep_id = getattr(dep_rec, "desc_id", None)
+                    if dep_id is not None and dep_id >= 0:
+                        tracer.edge(dep_id, desc.desc_id, "after")
+            trace.mark("validate0")
         if self.validate != "off":
             self._desclint(desc)
+        if trace is not None:
+            trace.mark("validate1")
         eng = self.policy.select(self.engines, desc, producer)
         deps = list(after) if after is not None else None
         delay = self.backoff_base_s
@@ -640,13 +703,16 @@ class Device:
             with self._engine_lock:
                 status, rec = eng.submit(desc, group=group, wq=wq,
                                          priority=priority,
-                                         producer=producer, after=deps)
+                                         producer=producer, after=deps,
+                                         trace=trace)
             self._dispatch_done()  # retirals observed by the submit's kick
             if status != Status.RETRY:
                 with self._lock:
                     self.policy_stats["decisions"][eng.name] += 1
                     self.policy_stats["decisions_by_op"][f"{eng.name}/{op_name(desc)}"] += 1
                     self.policy_stats["backoff_retries"] += attempt
+                if trace is not None and attempt:
+                    trace.attrs["retries"] = attempt
                 fut = Future(self, eng, rec)
                 self._inflight[id(rec)] = fut
                 if rec.is_done():
@@ -660,6 +726,11 @@ class Device:
         with self._lock:
             self.policy_stats["backoff_retries"] += self.max_retries
             self.policy_stats["queue_full"] += 1
+        if trace is not None:
+            # close the trace so a shed submission still folds/export:
+            # it consumed host time even though no engine accepted it
+            trace.attrs["error"] = "QueueFull"
+            trace.mark("resolved")
         raise QueueFull(eng.name, self.max_retries + 1)
 
     def _desclint(self, desc: Submittable) -> None:
@@ -933,6 +1004,7 @@ def make_device(n_instances: int = 1, *,
                 topology: Optional[Topology] = None,
                 max_retries: int = 10, backoff_base_s: float = 20e-6,
                 validate: str = "warn",
+                trace: Any = None,
                 **cfg_kw) -> Device:
     """Build a Device over fresh engine instances (Fig. 10 topology).
 
@@ -948,7 +1020,11 @@ def make_device(n_instances: int = 1, *,
     ``validate`` sets the submit-time descriptor validation mode
     (repro.analysis.desclint): "strict" raises the typed DescriptorError
     taxonomy on malformed descriptors, "warn" (default) records them on the
-    ``desclint_warnings`` counter, "off" skips the checks."""
+    ``desclint_warnings`` counter, "off" skips the checks.
+    ``trace`` opts in descriptor-lifecycle tracing (repro.obs): a sampling
+    rate in [0, 1] (rates outside raise ``TraceRateError``, dsalint
+    DSA105), True (trace everything), or a ``TraceConfig``/``Tracer``;
+    the span trees land on ``device.tracer`` (docs/tracing.md)."""
     if wq_configs is not None:
         pes = cfg_kw.pop("pes_per_group", 4)
         if cfg_kw:
@@ -958,8 +1034,8 @@ def make_device(n_instances: int = 1, *,
                       wait_policy=wait_policy,
                       wq_configs=wq_configs, pes_per_group=pes,
                       max_retries=max_retries, backoff_base_s=backoff_base_s,
-                      validate=validate)
+                      validate=validate, trace=trace)
     return Device(n_instances=n_instances, topology=topology, policy=policy,
                   wait_policy=wait_policy, config_kw=cfg_kw or None,
                   max_retries=max_retries, backoff_base_s=backoff_base_s,
-                  validate=validate)
+                  validate=validate, trace=trace)

@@ -249,6 +249,11 @@ class StreamEngine:
         self._listeners.append(fn)
 
     def _notify(self, rec: CompletionRecord) -> None:
+        if rec.trace is not None:
+            # completion-record write instant: ends the completion_write
+            # span (every resolve path — success, error, failed fence —
+            # funnels through here, like the counters)
+            rec.trace.mark("resolved")
         self._count(rec)
         for fn in self._listeners:
             fn(rec)
@@ -328,13 +333,17 @@ class StreamEngine:
                wq: Union[int, str, None] = None,
                producer: Optional[str] = None,
                after: Optional[Sequence[Any]] = None,
-               priority: Optional[int] = None) -> Tuple[Status, CompletionRecord]:
+               priority: Optional[int] = None,
+               trace: Optional[Any] = None) -> Tuple[Status, CompletionRecord]:
         """Enqueue a descriptor.  ``after`` is a sequence of dependency fences
         (CompletionRecords or anything with ``is_done()``/``status``): the
         descriptor is held back — the DSA batch-fence analogue — and only
         enters its WQ once every dependency has retired.  ``wq`` may be an
         index or a WQ name; ``priority`` steers to the nearest-priority WQ
-        when no explicit ``wq`` is given (see resolve_wq)."""
+        when no explicit ``wq`` is given (see resolve_wq).  ``trace`` is
+        the submission's lifecycle trace (repro.obs), attached to the
+        completion record BEFORE any launch so dispatch/exec marks land
+        even when the internal kick runs the descriptor synchronously."""
         group, wq_idx = self.resolve_wq(group, wq, priority)
         after = list(after or ())
         failed = next((d for d in after
@@ -342,7 +351,8 @@ class StreamEngine:
         if failed is not None:
             rec = CompletionRecord(desc_id=desc.desc_id, status=Status.ERROR,
                                    op=op_name(desc),
-                                   error=f"dependency failed: {failed.status.name}")
+                                   error=f"dependency failed: {failed.status.name}",
+                                   trace=trace)
             self.records[desc.desc_id] = rec
             self._notify(rec)
             return Status.ERROR, rec
@@ -355,7 +365,11 @@ class StreamEngine:
                     desc_id=desc.desc_id, status=Status.RETRY, op=op_name(desc)
                 )
             rec = CompletionRecord(desc_id=desc.desc_id, status=Status.PENDING,
-                                   op=op_name(desc))
+                                   op=op_name(desc), trace=trace)
+            if trace is not None:
+                # accepted into the fence park list: wq_wait covers the
+                # fence hold plus any later WQ residency
+                trace.mark("accept")
             self.records[desc.desc_id] = rec
             self._deferred.append((desc, group, wq_idx, producer, deps, rec))
             self.kick()
@@ -363,6 +377,9 @@ class StreamEngine:
         status = self.wq(group, wq_idx).submit(desc, producer=producer)
         rec = CompletionRecord(desc_id=desc.desc_id, status=status, op=op_name(desc))
         if status != Status.RETRY:
+            rec.trace = trace
+            if trace is not None:
+                trace.mark("accept")
             self.records[desc.desc_id] = rec
         self.kick()
         return status, rec
@@ -459,15 +476,25 @@ class StreamEngine:
         slot.record = rec
         slot.t0 = time.perf_counter()
         slot.outputs = None
+        tr = rec.trace
+        if tr is not None:
+            tr.mark("dispatch")
+            tr.attrs.setdefault("engine", self.name)
+            if src_wq is not None:
+                tr.attrs.setdefault("wq", src_wq.name)
 
-        def work(desc=desc, dst_tier=dst_tier, enqcmd_s=enqcmd_s):
+        def work(desc=desc, dst_tier=dst_tier, enqcmd_s=enqcmd_s, tr=tr):
             # runs on a PE worker thread: the dispatch (and, on platforms
             # where XLA dispatches synchronously, the whole kernel) happens
             # off the submitting thread, so a parked host is genuinely free
+            if tr is not None:
+                tr.mark("exec0")
             if isinstance(desc, BatchDescriptor):
                 outputs, nbytes, modeled = self._execute_batch(desc, dst_tier=dst_tier)
             else:
                 outputs, nbytes, modeled = self._execute_one(desc, dst_tier=dst_tier)
+            if tr is not None:
+                tr.mark("exec1")
             return outputs, nbytes, (modeled + enqcmd_s) * 1e6
 
         slot.work = _pe_pool().submit(work)

@@ -64,6 +64,10 @@ class Sampler:
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # first exception a tick raised on the background thread (e.g. the
+        # device was torn down mid-run): the thread stops sampling instead
+        # of crashing with a traceback, and stop()/callers can inspect it
+        self.error: Optional[BaseException] = None
         # gauges pushed between ticks (serving stages etc.); folded into the
         # next tick's row so exports stay one-row-per-tick
         self._pending_gauges: Dict[str, float] = {}
@@ -91,6 +95,9 @@ class Sampler:
                               "queue_full": ps["queue_full"],
                               "desclint_warnings":
                                   ps.get("desclint_warnings", 0)}
+        tracer = getattr(self.device, "tracer", None)
+        if tracer is not None:
+            prev["trace"] = tracer.counters_snapshot()
         return prev
 
     # ------------------------------------------------------------------ recording
@@ -232,6 +239,21 @@ class Sampler:
                              cur["policy"].get("desclint_warnings", 0)
                              - pp.get("desclint_warnings", 0), t)
 
+            tr_cur = cur.get("trace")
+            if tr_cur:
+                tr_prev = self._prev.get("trace", {})
+                self._record(row, "trace.sampled",
+                             tr_cur["sampled"] - tr_prev.get("sampled", 0), t)
+                # live phase occupancy: seconds of each lifecycle phase
+                # completed per wall second this tick (the pcm_repro
+                # phases line; >1 means parallel descriptors in flight)
+                for key, val in tr_cur.items():
+                    if not (key.startswith("phase.") and key.endswith("_s")):
+                        continue
+                    phase = key[len("phase."):-len("_s")]
+                    self._record(row, f"trace.phase.{phase}.occupancy",
+                                 (val - tr_prev.get(key, 0.0)) / dt, t)
+
             for gname, gval in self._pending_gauges.items():
                 row[gname] = gval
                 if gname not in self._columns:
@@ -265,20 +287,35 @@ class Sampler:
 
     def _run(self) -> None:
         while not self._stop.wait(self.interval_s):
-            self.tick()
+            try:
+                self.tick()
+            except Exception as e:  # noqa: BLE001 — device torn down mid-tick
+                # racing a shutdown must not crash the daemon thread with a
+                # traceback; record the failure and stop sampling
+                self.error = e
+                self._stop.set()
+                return
 
     def stop(self, final_tick: bool = True) -> "Sampler":
         """Stop the background thread (taking one last sample so the tail
-        of the run is not lost) and detach from the device."""
+        of the run is not lost) and detach from the device.  Safe to call
+        when the device has already been torn down: a failing final tick
+        is recorded on ``self.error`` instead of raising."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
         if final_tick:
-            self.tick()
+            try:
+                self.tick()
+            except Exception as e:  # noqa: BLE001 — shutdown must be clean
+                self.error = e
         detach = getattr(self.device, "detach_observer", None)
         if detach is not None:
-            detach(self)
+            try:
+                detach(self)
+            except Exception as e:  # noqa: BLE001
+                self.error = self.error or e
         return self
 
     def __enter__(self) -> "Sampler":

@@ -26,6 +26,7 @@ pattern (§6.4) mapped onto LLM decode:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import threading
@@ -229,7 +230,14 @@ class VhostStyleServer:
             self._admit_now(slot, req)
 
     def _admit_now(self, slot: int, req: Request):
-        """Prompt pages have landed: prefill this slot's cache region."""
+        """Prompt pages have landed: prefill this slot's cache region.
+        Runs under the request's trace context (reorder commit is part of
+        the request lifecycle: any descriptor the prefill path submits
+        shares the request's trace id)."""
+        with self._trace_request(req):
+            self._admit_now_inner(slot, req)
+
+    def _admit_now_inner(self, slot: int, req: Request):
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         cache1, logits, _ = self.model.prefill(self.params, {"tokens": prompt}, self.max_cache_len)
         # splice the single-sequence cache into the batch cache at `slot`
@@ -278,9 +286,21 @@ class VhostStyleServer:
         del self.queue[best_i]
         return req
 
+    def _trace_request(self, req: Request):
+        """Request-scoped trace context: every descriptor submitted inside
+        (admission copies, KV paging, continuations) shares one trace id —
+        ``req<id>`` — so the trace tooling can group a request's lifecycle
+        across SLO admission, KV paging, and reorder commit.  A no-op
+        context when the device has no tracer."""
+        tracer = getattr(self.device, "tracer", None)
+        if tracer is None:
+            return contextlib.nullcontext()
+        return tracer.request(f"req{req.req_id}")
+
     def _release_kv(self, req: Request):
         if self.kv_pool is not None and req.kv_pages:
-            self.kv_pool.free(req.req_id)
+            with self._trace_request(req):
+                self.kv_pool.free(req.req_id)
             req.kv_pages = 0
 
     def _shed_now(self, req: Request):
@@ -298,7 +318,9 @@ class VhostStyleServer:
             return True
         n_pages = max(1, math.ceil(len(req.prompt) / self.kv_pool.page_tokens))
         node = (req.home_node if self.topology.n_nodes > 1 else None)
-        if not self.kv_pool.alloc(req.req_id, n_pages, node=node):
+        with self._trace_request(req):
+            ok = self.kv_pool.alloc(req.req_id, n_pages, node=node)
+        if not ok:
             self.metrics["kv_alloc_failures"] += 1
             return False
         req.kv_pages = n_pages
@@ -326,9 +348,10 @@ class VhostStyleServer:
                 for c in chunks[: self.burst]
             ]
             try:
-                fut = self.device.batch_async(descs, producer=f"slot{slot}",
-                                              wq=self._wq_for(req),
-                                              node=req.home_node)
+                with self._trace_request(req):
+                    fut = self.device.batch_async(descs, producer=f"slot{slot}",
+                                                  wq=self._wq_for(req),
+                                                  node=req.home_node)
             except QueueFull:
                 # engine-side backpressure survived bounded backoff: give
                 # the slot back, then either shed (shed-first classes) or

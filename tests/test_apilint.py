@@ -150,6 +150,51 @@ def test_suppression_of_other_code_does_not_mask():
     """) == ["DSA101"]
 
 
+# --------------------------------------------------------------------------- DSA105
+def test_dsa105_trace_rate_literal_out_of_range_fires():
+    assert _codes("""
+        dev = make_device(trace=1.5)
+    """) == ["DSA105"]
+
+
+def test_dsa105_negative_literal_fires():
+    # -0.5 parses as UnaryOp(USub, Constant), not a Constant
+    assert _codes("""
+        cfg = TraceConfig(rate=-0.5)
+    """) == ["DSA105"]
+
+
+def test_dsa105_dotted_callee_and_device_kwarg_fire():
+    assert _codes("""
+        d = repro.Device(topo, trace=2)
+    """) == ["DSA105"]
+
+
+def test_dsa105_in_range_bool_and_variable_clean():
+    assert _codes("""
+        a = make_device(trace=0.5)
+        b = make_device(trace=True)
+        c = make_device(trace=1)
+        r = 99.0
+        d = make_device(trace=r)
+        e = TraceConfig(rate=0.0)
+    """) == []
+
+
+def test_dsa105_unrelated_callee_clean():
+    # only make_device/Device/TraceConfig call sites carry a rate
+    assert _codes("""
+        x = configure(trace=5.0)
+        y = Device2(rate=5.0)
+    """) == []
+
+
+def test_dsa105_suppression_comment():
+    assert _codes("""
+        dev = make_device(trace=1.5)  # dsalint: disable=DSA105
+    """) == []
+
+
 # --------------------------------------------------------------------------- entry points / CLI
 def test_lint_source_reports_position_and_message():
     vs = apilint.lint_source("def f(d, b):\n    d.submit(b)\n", path="x.py")

@@ -308,3 +308,115 @@ def test_pcm_repro_render_frame(rng):
         assert e.name in text
     assert "NODE" in text and "CROSS-GB/s" in text
     assert "pressure:" in text
+
+
+# ---------------------------------------------------------------- exporter edge cases
+def test_export_empty_sampler_round_trips(tmp_path):
+    """Zero ticks: CSV is a lone header, JSONL is empty — both re-parse."""
+    d = make_device()
+    sampler = Sampler(d, clock=FakeClock())
+    text = sampler.to_csv(str(tmp_path / "empty.csv"))
+    assert list(csv.DictReader(io.StringIO(text))) == []
+    assert text.splitlines()[0]  # header line present
+    jtext = sampler.to_jsonl(str(tmp_path / "empty.jsonl"))
+    assert jtext == ""
+    assert (tmp_path / "empty.jsonl").read_text() == ""
+
+
+def test_export_nonfinite_values_stay_parseable():
+    """NaN/inf gauges must not produce bare NaN tokens (invalid JSON) or
+    poisoned CSV cells: JSONL writes null, CSV an empty cell."""
+    clock = FakeClock()
+    d = make_device()
+    sampler = Sampler(d, clock=clock)
+    clock.advance(1.0)
+    sampler.gauge("weird.nan", float("nan"))
+    sampler.gauge("weird.inf", float("inf"))
+    sampler.gauge("weird.ok", 3.0)
+    sampler.tick()
+    for line in sampler.to_jsonl().splitlines():
+        obj = json.loads(line)  # raises on bare NaN/Infinity tokens
+        assert obj["weird.nan"] is None
+        assert obj["weird.inf"] is None
+        assert obj["weird.ok"] == 3.0
+    row = next(csv.DictReader(io.StringIO(sampler.to_csv())))
+    assert row["weird.nan"] == ""
+    assert row["weird.inf"] == ""
+    assert row["weird.ok"] == "3"
+
+
+def test_export_after_ring_wraparound(rng):
+    """Exports see only the retained window, with consistent columns."""
+    clock = FakeClock()
+    d = make_device()
+    sampler = Sampler(d, capacity=4, clock=clock)
+    buf = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    for _ in range(10):
+        _burst(d, buf, 1)
+        clock.advance(1.0)
+        sampler.tick()
+    d.drain()
+    rows = list(csv.DictReader(io.StringIO(sampler.to_csv())))
+    assert len(rows) == 4
+    assert [float(r["time_s"]) for r in rows] == [7.0, 8.0, 9.0, 10.0]
+    objs = [json.loads(line) for line in sampler.to_jsonl().splitlines()]
+    assert [o["time_s"] for o in objs] == [7.0, 8.0, 9.0, 10.0]
+
+
+# ---------------------------------------------------------------- teardown races
+def test_sampler_tick_error_is_stored_not_raised():
+    """A reader racing device teardown must not kill the monitor thread
+    with a traceback: the error lands on sampler.error and stop() still
+    detaches cleanly (tools/pcm_repro.py exits 0 and reports it)."""
+    d = make_device()
+    sampler = Sampler(d, clock=FakeClock())
+
+    def boom():
+        raise RuntimeError("engine torn down mid-read")
+
+    for e in d.engines:
+        e.counters_snapshot = boom
+    sampler.start()
+    sampler._thread.join(timeout=5.0)  # _run swallows the error and stops
+    assert not sampler._thread.is_alive()
+    sampler.stop()  # second stop with the device broken: still no raise
+    assert isinstance(sampler.error, RuntimeError)
+
+
+def test_sampler_stop_survives_final_tick_failure():
+    d = make_device()
+    sampler = Sampler(d, clock=FakeClock())
+    sampler.tick()
+
+    def boom():
+        raise RuntimeError("device drained under the sampler")
+
+    for e in d.engines:
+        e.counters_snapshot = boom
+    sampler.stop()  # final flush tick fails internally; no traceback
+    assert isinstance(sampler.error, RuntimeError)
+    assert len(sampler.rows()) == 1  # pre-failure data survives
+
+
+# ---------------------------------------------------------------- trace series
+def test_sampler_ticks_trace_phase_occupancy(rng):
+    """With make_device(trace=...), each tick derives per-phase occupancy
+    (folded phase seconds per wall second) from the tracer's monotonic
+    counters — the pcm_repro live phase line."""
+    clock = FakeClock()
+    d = make_device(trace=1.0)
+    sampler = Sampler(d, clock=clock)
+    buf = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    _burst(d, buf, 4)
+    d.drain()
+    clock.advance(2.0)
+    sampler.tick()
+    s = sampler.series.get("trace.sampled")
+    assert s is not None and s.sum() == 4
+    occ = sampler.series["trace.phase.pe_exec.occupancy"]
+    folded = d.tracer.counters_snapshot()["phase.pe_exec_s"]
+    assert occ.last() == pytest.approx(folded / 2.0)
+    # idle second tick: occupancy falls to zero, counters stay monotonic
+    clock.advance(2.0)
+    sampler.tick()
+    assert occ.last() == 0.0

@@ -18,6 +18,15 @@ options:
                     CI smoke mode (no live refresh, implies one frame)
     --duration S    workload length in seconds (default 5.0)
     --instances N   engine instances (per node when -numa; default 2)
+    --trace [RATE]  attach a descriptor-lifecycle tracer (docs/tracing.md)
+                    at the given sampling rate (default 1.0 when the flag
+                    is bare); each frame then shows live per-phase
+                    occupancy (seconds of phase time folded per wall
+                    second) next to the engine table
+
+Shutdown is exception-safe: stopping the workload / sampler during a
+device teardown race prints a one-line note instead of a traceback and
+the exit code stays 0 — monitors must never fail the run they observe.
 
 Without an external workload the monitor drives its own: a fig2-style
 mixed-size copy/CRC loop submitted through the device, so every frame has
@@ -38,7 +47,7 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import QueueFull, Topology, make_device  # noqa: E402
-from repro.obs import Sampler  # noqa: E402
+from repro.obs import PHASES, Sampler  # noqa: E402
 
 DEFAULT_CSV = "results/obs/pcm_repro.csv"
 #: fig2-style transfer-size mix (bytes): small descriptors stress submit
@@ -163,7 +172,26 @@ def render_frame(sampler: Sampler, device, numa: bool, frame: int) -> str:
         f"pressure: backoff_retries={row.get('device.backoff_retries', 0):.0f} "
         f"queue_full={row.get('device.queue_full', 0):.0f}"
     )
+    if any(k.startswith("trace.") for k in row):
+        parts = [f"sampled=+{row.get('trace.sampled', 0):.0f}"]
+        for phase in PHASES:
+            occ = row.get(f"trace.phase.{phase}.occupancy")
+            if occ:
+                parts.append(f"{phase}={occ:.1%}")
+        lines.append("trace: " + " ".join(parts))
     return "\n".join(lines)
+
+
+def shutdown_quietly(*stoppables) -> None:
+    """Stop monitors/workloads without letting a teardown race (sampler
+    thread vs device drain) turn into a traceback — the monitor must not
+    fail the run it observes."""
+    for s in stoppables:
+        try:
+            s.stop()
+        except Exception as exc:  # noqa: BLE001 — deliberate: exit clean
+            print(f"pcm_repro: shutdown note ({type(s).__name__}): {exc!r}",
+                  file=sys.stderr)
 
 
 def print_summary(sampler: Sampler) -> None:
@@ -202,12 +230,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="workload duration seconds (default 5.0)")
     ap.add_argument("--instances", type=int, default=2,
                     help="engine instances (per node with -numa)")
+    ap.add_argument("--trace", nargs="?", const=1.0, default=None,
+                    type=float, metavar="RATE",
+                    help="descriptor-lifecycle tracing at RATE (default 1.0)")
     args = ap.parse_args(argv)
 
     topo = (Topology.symmetric(2, engines_per_node=args.instances)
             if args.numa else None)
     device = make_device(n_instances=args.instances, topology=topo,
-                         policy="numa_local" if args.numa else "round_robin")
+                         policy="numa_local" if args.numa else "round_robin",
+                         trace=args.trace)
     sampler = Sampler(device, interval_s=args.i)
     if not args.silent:
         names = ", ".join(e.name for e in device.engines)
@@ -245,12 +277,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     except KeyboardInterrupt:
         pass
     finally:
-        workload.stop()
-        sampler.stop()
+        shutdown_quietly(workload, sampler)
+    if sampler.error is not None:
+        # a tick raced device teardown: report it, keep the exit clean
+        print(f"pcm_repro: sampler note: {sampler.error!r}", file=sys.stderr)
     if args.csv:
-        sampler.to_csv(args.csv)
-        if not args.silent:
-            print(f"wrote {args.csv}")
+        try:
+            sampler.to_csv(args.csv)
+            if not args.silent:
+                print(f"wrote {args.csv}")
+        except Exception as exc:  # noqa: BLE001 — deliberate: exit clean
+            print(f"pcm_repro: csv note: {exc!r}", file=sys.stderr)
     if not args.silent:
         print_summary(sampler)
     return 0
