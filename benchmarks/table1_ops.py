@@ -37,6 +37,9 @@ def rows() -> List[Row]:
         ("batch_copy_x16", lambda: ops.batch_copy(
             pool, jnp.zeros_like(pool), jnp.arange(16, dtype=jnp.int32),
             jnp.arange(16, dtype=jnp.int32)), 1.0),
+        # fused pairs: one launch where the unfused pair takes two
+        ("copy_crc", lambda: ops.copy_crc(w), 1.0),
+        ("fill_verify", lambda: ops.fill_verify(pat, SIZE // 4), 0.5),
     ]
     for name, fn, rf in cases:
         t = time_call(fn, iters=3, warmup=1)

@@ -31,6 +31,15 @@ fine, run fine in the small, and rot a real deployment:
                                 The runtime rejects it too (the typed
                                 ``TraceRateError``), but the lint catches
                                 it before anything runs.
+  DSA106  unbatched-submit-loop a ``for`` loop submitting one descriptor
+                                per iteration — every iteration pays a full
+                                doorbell (and on shared WQs the ENQCMD
+                                round trip) that ``submit_many`` / a
+                                ``submit_ring`` would amortize across the
+                                burst (paper Fig. 3 / G1).  Conditional
+                                submits (under ``if``/``try``), retry loops
+                                (containing ``break``), and the batch entry
+                                points themselves are exempt.
 
 Suppression: append ``# dsalint: disable`` (all rules) or
 ``# dsalint: disable=DSA103`` / ``=DSA101,DSA104`` to the offending line.
@@ -58,6 +67,8 @@ RULES: Dict[str, str] = {
               "that neither re-raises nor handles QueueFull",
     "DSA105": "trace-rate: literal trace=/rate= sampling rate outside "
               "[0, 1] at a make_device/Device/TraceConfig call site",
+    "DSA106": "unbatched-submit-loop: per-descriptor submit in a loop — "
+              "batch via submit_many/submit_ring to amortize the doorbell",
 }
 
 #: callee name -> keyword carrying a sampling rate in [0, 1] (DSA105)
@@ -70,12 +81,18 @@ TRACE_RATE_KWARGS: Dict[str, str] = {
 #: Device/engine methods whose return value is a Future (or a completion
 #: handle) that must not be dropped.
 SUBMIT_METHODS: Set[str] = {
-    "submit",
+    "submit", "submit_many",
     "memcpy_async", "dualcast_async", "fill_async", "compare_async",
     "compare_pattern_async", "crc32_async", "delta_create_async",
     "delta_apply_async", "dif_insert_async", "dif_check_async",
     "dif_strip_async", "batch_copy_async", "batch_async",
-    "cache_flush_async",
+    "cache_flush_async", "copy_crc_async", "fill_verify_async",
+}
+
+#: batched submit entry points — one doorbell per burst, so calling them in
+#: a loop is already amortized (exempt from DSA106).
+BATCH_SUBMIT_METHODS: Set[str] = {
+    "submit_many", "batch_async", "batch_copy_async",
 }
 
 #: Calls that block on completion (illegal inside callback bodies).
@@ -249,6 +266,49 @@ class _Linter(ast.NodeVisitor):
                            "(wait/wait_all) instead")
                 break
         self.generic_visit(node)
+
+    # ------------------------------------------------------------------ DSA106
+    #: subtrees skipped when hunting per-descriptor submits: conditional
+    #: paths (if/try), nested scopes, and inner loops (which get their own
+    #: visit_For pass and verdict)
+    _DSA106_PRUNE = (ast.If, ast.IfExp, ast.Try, ast.For, ast.AsyncFor,
+                     ast.While, ast.FunctionDef, ast.AsyncFunctionDef,
+                     ast.Lambda)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_submit_loop(node)
+        self.generic_visit(node)
+
+    visit_AsyncFor = visit_For
+
+    def _check_submit_loop(self, node: ast.For) -> None:
+        # a loop that can break or return out is a retry/backoff wrapper
+        # around one logical submit, not a homogeneous fan-out — exempt
+        own_exit = self._walk_pruned(
+            node.body, (ast.For, ast.AsyncFor, ast.While,
+                        ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+        if any(isinstance(n, (ast.Break, ast.Return)) for n in own_exit):
+            return
+        for child in self._walk_pruned(node.body, self._DSA106_PRUNE):
+            attr = _call_attr(child)
+            if attr in SUBMIT_METHODS and attr not in BATCH_SUBMIT_METHODS:
+                self._emit(child, "DSA106",
+                           f"per-descriptor '{attr}(...)' inside a loop — "
+                           f"every iteration pays a full doorbell; batch "
+                           f"the burst via submit_many()/submit_ring() "
+                           f"(or batch_async) to amortize it")
+
+    @staticmethod
+    def _walk_pruned(stmts: Sequence[ast.AST], prune) -> Iterable[ast.AST]:
+        """Walk statement subtrees, skipping pruned-type nodes entirely —
+        whether they appear as direct body statements or deeper down."""
+        stack = list(stmts)
+        while stack:
+            n = stack.pop()
+            if isinstance(n, prune):
+                continue
+            yield n
+            stack.extend(ast.iter_child_nodes(n))
 
     # ------------------------------------------------------------------ DSA104
     def visit_Try(self, node: ast.Try) -> None:

@@ -191,12 +191,13 @@ def _word_dtype_ok(x: Any) -> bool:
 def _check_fill(d: WorkDescriptor, out: List[Diagnostic]) -> None:
     if d.pattern is None:
         out.append(_err("DESC101",
-                        "fill: required operand 'pattern' is missing"))
+                        f"{d.op.value}: required operand 'pattern' is "
+                        f"missing"))
     n = getattr(d, "n_words", None)
     if not isinstance(n, (int, np.integer)) or n < 1:
         out.append(_err("DESC101",
-                        f"fill: 'n_words' must be a positive int (transfer "
-                        f"size), got {n!r}"))
+                        f"{d.op.value}: 'n_words' must be a positive int "
+                        f"(transfer size), got {n!r}"))
 
 
 def _check_compare(d: WorkDescriptor, out: List[Diagnostic]) -> None:
@@ -310,6 +311,11 @@ _OP_CHECKS = {
     OpType.DIF_STRIP: _check_dif,
     OpType.BATCH_COPY: _check_batch_copy,
     OpType.CACHE_FLUSH: lambda d, out: None,  # modeled only, no operands
+    # fused pairs share the operand contracts of their unfused halves:
+    # copy_crc reads one source buffer (memcpy + crc32), fill_verify takes
+    # the fill contract (pattern + n_words) and emits the verify record
+    OpType.COPY_CRC: _check_src_only,
+    OpType.FILL_VERIFY: _check_fill,
 }
 
 

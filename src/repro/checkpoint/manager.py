@@ -104,9 +104,12 @@ class CheckpointManager:
             pad = (-len(data)) % 4
             words = jax.numpy.asarray(np.frombuffer(data + b"\0" * pad, dtype="<u4"))
             if self.device is not None:
-                # CRC as an engine descriptor: shows up in telemetry and
-                # shares the instance pool with other checkpoint traffic
-                return self.device.crc32_async(words, producer="checkpoint")
+                # fused copy+CRC descriptor: the save path reads each leaf
+                # out anyway, so one copy_crc launch replaces the separate
+                # copy and CRC passes; shows up in telemetry and shares the
+                # instance pool with other checkpoint traffic
+                fut = self.device.copy_crc_async(words, producer="checkpoint")
+                return fut.then(lambda r: int(r[1]))
             from repro.kernels import ops as kops
 
             return int(kops.crc32(words))

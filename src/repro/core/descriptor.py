@@ -31,6 +31,10 @@ class OpType(enum.Enum):
     DIF_STRIP = "dif_strip"
     BATCH_COPY = "batch_copy"  # paged batch-descriptor copy
     CACHE_FLUSH = "cache_flush"  # modeled only (no TPU analogue)
+    # fused pairs (one kernel launch, one descriptor): the hot-path ops that
+    # otherwise always travel together (copy-then-checksum, fill-then-verify)
+    COPY_CRC = "copy_crc"  # memcpy + CRC32 in one pass
+    FILL_VERIFY = "fill_verify"  # fill + compare_pattern readback in one pass
 
 
 class Status(enum.Enum):
@@ -74,6 +78,11 @@ class WorkDescriptor:
     # metadata
     desc_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     priority: int = 0
+    # fused-submission width: how many descriptors shared this one's
+    # doorbell (submit_many / submit ring).  The engine divides the
+    # non-posted ENQCMD round trip by this, so a fused batch of N on a
+    # shared WQ pays one round trip total instead of N.
+    fused_n: int = 1
     # allocation timestamp: start of the lifecycle "create" span when the
     # descriptor is traced (repro.obs.trace)
     created_t: float = dataclasses.field(default_factory=time.perf_counter,
@@ -84,7 +93,7 @@ class WorkDescriptor:
         # Degenerate operands (empty pools, dtype-less duck types) size to 0
         # rather than raising: desclint flags them as DESC106, and sizing is
         # used on telemetry paths that must never throw.
-        if self.op == OpType.FILL:
+        if self.op in (OpType.FILL, OpType.FILL_VERIFY):
             return max(self.n_words, 0) * 4
         if self.op == OpType.BATCH_COPY and self.src is not None:
             itemsize = getattr(getattr(self.src, "dtype", None), "itemsize", None)

@@ -32,7 +32,7 @@ import time
 import weakref
 import zlib
 from collections import Counter, defaultdict, deque
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 
@@ -567,6 +567,9 @@ class Device:
         # wq/priority defaults from here, keeping the class -> WQ mapping in
         # one place instead of at every call site
         self._slo_classes: Dict[str, Any] = {}
+        # live submit rings (weak: a dropped ring must not leak); kick()
+        # flushes them so every wait-policy pump advances deferred bursts
+        self._rings: List[Any] = []
         for e in self.engines:
             e.add_listener(self._on_record_done)
 
@@ -666,38 +669,11 @@ class Device:
         didn't pass them explicitly.
         Raises QueueFull when the target WQ stays full through every
         backoff attempt."""
-        if slo is not None:
-            cls = self._slo_classes.get(slo)
-            if cls is None:
-                raise KeyError(f"unregistered SLO class {slo!r}; call "
-                               f"register_slo_classes first "
-                               f"(have {sorted(self._slo_classes)})")
-            cls_wq = getattr(cls, "wq", None)
-            if wq is None and cls_wq is not None and self.has_wq(cls_wq):
-                wq = cls_wq
-            if priority is None and wq is None:
-                priority = getattr(cls, "priority", None)
-        tracer = self.tracer
-        trace = tracer.begin(desc) if tracer is not None else None
-        self._stamp_locality(desc, node)
-        if trace is not None:
-            if producer is not None:
-                trace.attrs["producer"] = producer
-            if slo is not None:
-                trace.attrs["slo"] = slo
-            if after:
-                for dep in after:
-                    dep_rec = getattr(dep, "record", dep)
-                    dep_id = getattr(dep_rec, "desc_id", None)
-                    if dep_id is not None and dep_id >= 0:
-                        tracer.edge(dep_id, desc.desc_id, "after")
-            trace.mark("validate0")
-        if self.validate != "off":
-            self._desclint(desc)
-        if trace is not None:
-            trace.mark("validate1")
-        eng = self.policy.select(self.engines, desc, producer)
+        wq, priority = self._resolve_slo(slo, wq, priority)
         deps = list(after) if after is not None else None
+        trace = self._prepare(desc, producer=producer, node=node, slo=slo,
+                              after=deps)
+        eng = self.policy.select(self.engines, desc, producer)
         delay = self.backoff_base_s
         for attempt in range(self.max_retries + 1):
             with self._engine_lock:
@@ -732,6 +708,146 @@ class Device:
             trace.attrs["error"] = "QueueFull"
             trace.mark("resolved")
         raise QueueFull(eng.name, self.max_retries + 1)
+
+    def _resolve_slo(self, slo: Optional[str], wq: Union[int, str, None],
+                     priority: Optional[int]) -> Tuple[Union[int, str, None],
+                                                       Optional[int]]:
+        """Fill wq/priority defaults from a registered SLO class when the
+        caller didn't pass them explicitly (shared by submit/submit_many
+        and the submit ring)."""
+        if slo is None:
+            return wq, priority
+        cls = self._slo_classes.get(slo)
+        if cls is None:
+            raise KeyError(f"unregistered SLO class {slo!r}; call "
+                           f"register_slo_classes first "
+                           f"(have {sorted(self._slo_classes)})")
+        cls_wq = getattr(cls, "wq", None)
+        if wq is None and cls_wq is not None and self.has_wq(cls_wq):
+            wq = cls_wq
+        if priority is None and wq is None:
+            priority = getattr(cls, "priority", None)
+        return wq, priority
+
+    def _prepare(self, desc: Submittable, *, producer: Optional[str],
+                 node: Optional[int], slo: Optional[str],
+                 after: Optional[Sequence[Any]]) -> Optional[Any]:
+        """Per-descriptor submit-side prep shared by every submission path:
+        begin the lifecycle trace, stamp operand locality, record fence
+        edges, and run desclint between the validate marks.  Returns the
+        trace (None when unsampled)."""
+        tracer = self.tracer
+        trace = tracer.begin(desc) if tracer is not None else None
+        self._stamp_locality(desc, node)
+        if trace is not None:
+            if producer is not None:
+                trace.attrs["producer"] = producer
+            if slo is not None:
+                trace.attrs["slo"] = slo
+            if after:
+                for dep in after:
+                    dep_rec = getattr(dep, "record", dep)
+                    dep_id = getattr(dep_rec, "desc_id", None)
+                    if dep_id is not None and dep_id >= 0:
+                        tracer.edge(dep_id, desc.desc_id, "after")
+            trace.mark("validate0")
+        if self.validate != "off":
+            self._desclint(desc)
+        if trace is not None:
+            trace.mark("validate1")
+        return trace
+
+    def submit_many(self, descs: Sequence[Submittable], *,
+                    after: Optional[Sequence[Any]] = None,
+                    group: Optional[int] = None,
+                    wq: Union[int, str, None] = None,
+                    priority: Optional[int] = None,
+                    producer: Optional[str] = None,
+                    node: Optional[int] = None,
+                    slo: Optional[str] = None,
+                    chunk: int = 32) -> List[Future]:
+        """Fused submission: route ``descs`` in doorbell bursts of up to
+        ``chunk``, taking the device and WQ locks once per burst instead of
+        once per descriptor and charging the non-posted ENQCMD round trip
+        once per burst (each member's ``fused_n`` is stamped with the burst
+        width).  Validation and lifecycle traces stay exactly
+        per-descriptor; the whole call shares one ``after`` fence list
+        (batch-fence semantics) and one policy decision per burst.
+        Returns one Future per descriptor, in order; raises QueueFull when
+        a burst stays refused through every backoff attempt."""
+        descs = list(descs)
+        if not descs:
+            return []
+        wq, priority = self._resolve_slo(slo, wq, priority)
+        deps = list(after) if after is not None else None
+        futures: List[Future] = []
+        step = max(int(chunk), 1)
+        for start in range(0, len(descs), step):
+            burst = descs[start:start + step]
+            traces = [self._prepare(d, producer=producer, node=node, slo=slo,
+                                    after=deps) for d in burst]
+            for d in burst:
+                d.fused_n = len(burst)
+            eng = self.policy.select(self.engines, burst[0], producer)
+            delay = self.backoff_base_s
+            results = None
+            for attempt in range(self.max_retries + 1):
+                with self._engine_lock:
+                    results = eng.submit_many(burst, group=group, wq=wq,
+                                              priority=priority,
+                                              producer=producer, after=deps,
+                                              traces=traces)
+                self._dispatch_done()
+                if results[0][0] != Status.RETRY:
+                    break
+                self.kick()
+                time.sleep(delay)
+                delay *= 2
+            else:
+                with self._lock:
+                    self.policy_stats["backoff_retries"] += self.max_retries
+                    self.policy_stats["queue_full"] += 1
+                for tr in traces:
+                    if tr is not None:
+                        tr.attrs["error"] = "QueueFull"
+                        tr.mark("resolved")
+                raise QueueFull(eng.name, self.max_retries + 1)
+            with self._lock:
+                self.policy_stats["decisions"][eng.name] += len(burst)
+                for d in burst:
+                    self.policy_stats["decisions_by_op"][f"{eng.name}/{op_name(d)}"] += 1
+                self.policy_stats["backoff_retries"] += attempt
+            for _status, rec in results:
+                fut = Future(self, eng, rec)
+                self._inflight[id(rec)] = fut
+                if rec.is_done():
+                    self._on_future_done(fut)
+                futures.append(fut)
+        return futures
+
+    def submit_ring(self, depth: int = 64, chunk: int = 32,
+                    **defaults) -> "SubmitRing":
+        """Opt-in deferred submission ring (see SubmitRing): ``add`` buffers
+        descriptors and returns live Futures; the buffered burst flushes
+        through the fused submit_many path on ``flush()``, when the ring
+        fills, or on any ``Device.kick()`` — which every wait policy pumps,
+        so waiting on a ringed Future flushes it automatically."""
+        ring = SubmitRing(self, depth=depth, chunk=chunk, **defaults)
+        self._rings.append(weakref.ref(ring))
+        return ring
+
+    def _flush_rings(self):
+        """Flush live submit rings (dropping dead weakrefs); called from
+        kick() so WaitPolicy pump loops advance deferred submissions."""
+        dead = False
+        for ref in list(self._rings):
+            ring = ref()
+            if ring is None:
+                dead = True
+                continue
+            ring.flush()
+        if dead:
+            self._rings = [r for r in self._rings if r() is not None]
 
     def _desclint(self, desc: Submittable) -> None:
         """Validate after locality stamping (so registry-vs-hint conflicts
@@ -851,8 +967,8 @@ class Device:
             work: List[Any] = []
             leaves: List[Any] = []
             for e in self.engines:
-                for slots in e._slots.values():
-                    for s in slots:
+                for active in e._active.values():
+                    for s in active:
                         if s.record is None or s.record.is_done():
                             continue
                         if s.work is not None and not s.work.done():
@@ -901,6 +1017,21 @@ class Device:
 
     def crc32_async(self, buf, **kw):
         return self.submit(WorkDescriptor(op=OpType.CRC32, src=buf), **kw)
+
+    def copy_crc_async(self, src, **kw):
+        """Fused memcpy+CRC32 in ONE kernel launch; the Future resolves to
+        ``(copy, crc)``.  Bit-exact with the unfused memcpy/crc32 pair at
+        roughly half the modeled device time (one read pass, one launch)."""
+        return self.submit(WorkDescriptor(op=OpType.COPY_CRC, src=src), **kw)
+
+    def fill_verify_async(self, pattern, n_words: int, **kw):
+        """Fused fill+compare_pattern in ONE kernel launch; the Future
+        resolves to ``(filled, (ok, first_bad_idx))`` — the written buffer
+        plus its in-kernel readback verification."""
+        return self.submit(
+            WorkDescriptor(op=OpType.FILL_VERIFY, pattern=pattern,
+                           n_words=n_words), **kw
+        )
 
     def delta_create_async(self, src, ref, cap: int = 1024, **kw):
         return self.submit(
@@ -963,7 +1094,12 @@ class Device:
     # ------------------------------------------------------------------ lifecycle
     def kick(self):
         """Pump every instance's arbiter + deferred fences once; completion
-        callbacks for anything that retired fire after the lock drops."""
+        callbacks for anything that retired fire after the lock drops.
+        Deferred submit rings flush first, so a kick (and therefore every
+        wait-policy pump loop) pushes ring-buffered bursts to the engines
+        before the arbiters run."""
+        if self._rings:
+            self._flush_rings()
         with self._engine_lock:
             for e in self.engines:
                 e.kick()
@@ -995,6 +1131,150 @@ class Device:
             self._dispatch_done()  # callbacks fire outside the lock
             if done:
                 return
+
+
+class SubmitRing:
+    """Opt-in deferred submission ring (the paper's batched-doorbell
+    guideline as an API): ``add()`` validates, traces, and buffers a
+    descriptor — returning a live Future immediately — and ``flush()``
+    pushes the buffered burst through the engine's fused ``submit_many``
+    path, taking the device and WQ locks once per burst and paying one
+    amortized ENQCMD doorbell per burst of up to ``chunk``.
+
+    The ring flushes itself when it reaches ``depth``, on ``flush()``/
+    ``close()``/context exit, and on every ``Device.kick()`` — which every
+    WaitPolicy pump loop calls, so simply waiting on a ringed Future
+    flushes it.  A burst refused by a full WQ stays buffered and retries on
+    the next flush; consecutive adds sharing the same ``after`` fence list
+    flush as one burst (batch-fence semantics).
+
+        with device.submit_ring(depth=64) as ring:
+            futs = [ring.add(WorkDescriptor(op=OpType.MEMCPY, src=x))
+                    for x in buffers]
+        device.wait_all(futs)
+    """
+
+    def __init__(self, device: Device, depth: int = 64, chunk: int = 32, *,
+                 group: Optional[int] = None, wq: Union[int, str, None] = None,
+                 priority: Optional[int] = None, producer: Optional[str] = None,
+                 node: Optional[int] = None, slo: Optional[str] = None):
+        self.device = device
+        self.depth = max(int(depth), 1)
+        self.chunk = max(min(int(chunk), self.depth), 1)
+        wq, priority = device._resolve_slo(slo, wq, priority)
+        self._kw = dict(group=group, wq=wq, priority=priority,
+                        producer=producer, node=node, slo=slo)
+        # (descriptor, trace, record, deps) in submission order
+        self._pending: "deque[Tuple[Any, Any, CompletionRecord, Optional[List[Any]]]]" = deque()
+        self._lock = _lockcheck.checked_lock("device.ring")
+        self._flushing = False
+        self.stats = {"added": 0, "flushed": 0, "doorbells": 0, "retries": 0}
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @staticmethod
+    def _fence_key(deps: Optional[List[Any]]) -> Tuple[int, ...]:
+        return tuple(id(d) for d in deps) if deps else ()
+
+    def add(self, desc: Submittable, *,
+            after: Optional[Sequence[Any]] = None) -> Future:
+        """Buffer one descriptor; returns its Future immediately (PENDING
+        until a flush lands it on an engine).  Validation, locality
+        stamping, and trace marks run here at add time — strict desclint
+        raises before anything is buffered."""
+        deps = list(after) if after is not None else None
+        trace = self.device._prepare(desc, producer=self._kw["producer"],
+                                     node=self._kw["node"],
+                                     slo=self._kw["slo"], after=deps)
+        rec = CompletionRecord(desc_id=desc.desc_id, status=Status.PENDING,
+                               op=op_name(desc), trace=trace)
+        fut = Future(self.device, None, rec)
+        self.device._inflight[id(rec)] = fut
+        with self._lock:
+            self._pending.append((desc, trace, rec, deps))
+            self.stats["added"] += 1
+            full = len(self._pending) >= self.depth
+        if full:
+            self.flush()
+        return fut
+
+    def flush(self) -> int:
+        """Submit buffered descriptors in fused bursts; returns how many
+        landed on an engine.  A burst the WQ refuses (RETRY) goes back to
+        the head of the ring for the next flush — every wait-policy kick
+        retries it, so backpressure resolves without busy-spinning here."""
+        dev = self.device
+        with self._lock:
+            if self._flushing or not self._pending:
+                return 0
+            self._flushing = True
+        flushed = 0
+        try:
+            while True:
+                with self._lock:
+                    if not self._pending:
+                        break
+                    key = self._fence_key(self._pending[0][3])
+                    burst = [self._pending.popleft()]
+                    while (self._pending and len(burst) < self.chunk
+                           and self._fence_key(self._pending[0][3]) == key):
+                        burst.append(self._pending.popleft())
+                descs = [b[0] for b in burst]
+                for d in descs:
+                    d.fused_n = len(descs)
+                eng = dev.policy.select(dev.engines, descs[0],
+                                        self._kw["producer"])
+                with dev._engine_lock:
+                    results = eng.submit_many(
+                        descs, group=self._kw["group"], wq=self._kw["wq"],
+                        priority=self._kw["priority"],
+                        producer=self._kw["producer"], after=burst[0][3],
+                        traces=[b[1] for b in burst],
+                        records=[b[2] for b in burst])
+                dev._dispatch_done()
+                if results[0][0] == Status.RETRY:
+                    with self._lock:
+                        self._pending.extendleft(reversed(burst))
+                        self.stats["retries"] += 1
+                    break
+                with dev._lock:
+                    dev.policy_stats["decisions"][eng.name] += len(burst)
+                    for d in descs:
+                        dev.policy_stats["decisions_by_op"][
+                            f"{eng.name}/{op_name(d)}"] += 1
+                flushed += len(burst)
+                self.stats["flushed"] += len(burst)
+                self.stats["doorbells"] += 1
+        finally:
+            with self._lock:
+                self._flushing = False
+        return flushed
+
+    def close(self):
+        """Drain the ring completely, pumping the device through WQ
+        backpressure with the device's bounded backoff; raises QueueFull
+        if the buffered burst can never land."""
+        delay = self.device.backoff_base_s
+        for _attempt in range(self.device.max_retries + 1):
+            self.flush()
+            if not self._pending:
+                return
+            self.device.kick()
+            time.sleep(delay)
+            delay *= 2
+        with self.device._lock:
+            self.device.policy_stats["queue_full"] += 1
+        raise QueueFull("submit_ring", self.device.max_retries + 1)
+
+    def __enter__(self) -> "SubmitRing":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+        else:
+            self.flush()  # best effort; don't mask the in-flight exception
 
 
 def make_device(n_instances: int = 1, *,

@@ -216,6 +216,17 @@ class StreamEngine:
         self._slots: Dict[str, List[_PESlot]] = {
             g.name: [_PESlot() for _ in range(g.n_pes)] for g in self.config.groups
         }
+        # hot-path slot recycling: ``_free`` is the ready ring of idle slot
+        # objects, ``_active`` the in-flight list.  kick() retires only the
+        # active list and dispatches by popping the free ring, so a kick is
+        # O(in-flight + dispatched) instead of O(total slots); slot objects
+        # are reused forever (``_slots`` stays the full inventory).
+        self._free: Dict[str, List[_PESlot]] = {
+            g.name: list(self._slots[g.name]) for g in self.config.groups
+        }
+        self._active: Dict[str, List[_PESlot]] = {
+            g.name: [] for g in self.config.groups
+        }
         # deficit counters for priority-weighted draining (one per WQ)
         self._credit: Dict[str, Dict[str, float]] = {
             g.name: {w.name: 0.0 for w in g.wqs} for g in self.config.groups
@@ -231,6 +242,12 @@ class StreamEngine:
             "modeled_us": 0.0, "wall_us": 0.0,
             "local_ops": 0, "local_bytes": 0,
             "cross_ops": 0, "cross_bytes": 0, "link_bytes": 0,
+            # submission-side counters: every accepted descriptor bumps
+            # ``submitted``; those arriving through a fused doorbell
+            # (submit_many / submit ring) also bump ``fused_descs``, with
+            # one ``fused_batches`` per doorbell — pcm_repro derives its
+            # submits/s and fused-batch-ratio columns from these
+            "submitted": 0, "fused_batches": 0, "fused_descs": 0,
         }
         self._counters_lock = _lockcheck.checked_lock("engine.counters")
         # deferred submissions waiting on dependency fences:
@@ -276,6 +293,14 @@ class StreamEngine:
             else:
                 c["local_ops"] += 1
                 c["local_bytes"] += rec.bytes_processed
+
+    def _count_submitted(self, n: int, fused: bool) -> None:
+        with self._counters_lock:
+            c = self.counters
+            c["submitted"] += n
+            if fused:
+                c["fused_batches"] += 1
+                c["fused_descs"] += n
 
     def counters_snapshot(self) -> Dict[str, float]:
         """Point-in-time copy of the monotonic counters (delta-sampling
@@ -354,6 +379,7 @@ class StreamEngine:
                                    error=f"dependency failed: {failed.status.name}",
                                    trace=trace)
             self.records[desc.desc_id] = rec
+            self._count_submitted(1, fused=False)
             self._notify(rec)
             return Status.ERROR, rec
         deps = [d for d in after if not d.is_done()]
@@ -372,6 +398,7 @@ class StreamEngine:
                 trace.mark("accept")
             self.records[desc.desc_id] = rec
             self._deferred.append((desc, group, wq_idx, producer, deps, rec))
+            self._count_submitted(1, fused=False)
             self.kick()
             return Status.PENDING, rec
         status = self.wq(group, wq_idx).submit(desc, producer=producer)
@@ -381,8 +408,97 @@ class StreamEngine:
             if trace is not None:
                 trace.mark("accept")
             self.records[desc.desc_id] = rec
+            self._count_submitted(1, fused=False)
         self.kick()
         return status, rec
+
+    def submit_many(self, descs: Sequence[Submittable],
+                    group: Optional[int] = None,
+                    wq: Union[int, str, None] = None,
+                    producer: Optional[str] = None,
+                    after: Optional[Sequence[Any]] = None,
+                    priority: Optional[int] = None,
+                    traces: Optional[Sequence[Any]] = None,
+                    records: Optional[Sequence[CompletionRecord]] = None,
+                    ) -> List[Tuple[Status, CompletionRecord]]:
+        """Fused-doorbell submission: enqueue ``descs`` with ONE WQ lock
+        acquisition and ONE arbiter kick (the batched MOVDIR64B/ENQCMD
+        analogue).  The whole burst shares one ``after`` fence list —
+        DSA batch-fence semantics — and is all-or-nothing: on a full WQ the
+        single returned entry is ``(RETRY, rec)`` and nothing was enqueued,
+        so the Device layer can back off and resubmit the burst as a unit.
+
+        ``traces`` (parallel to ``descs``) carries per-descriptor lifecycle
+        traces so spans stay exactly per-descriptor; ``records`` lets a
+        submit ring pass in pre-created CompletionRecords whose Futures are
+        already in callers' hands."""
+        descs = list(descs)
+        if not descs:
+            return []
+        group, wq_idx = self.resolve_wq(group, wq, priority)
+        after = list(after or ())
+        traces = list(traces) if traces is not None else [None] * len(descs)
+        recs = list(records) if records is not None else [None] * len(descs)
+
+        def bind(rec, desc, status, trace):
+            if rec is None:
+                rec = CompletionRecord(desc_id=desc.desc_id, status=status,
+                                       op=op_name(desc), trace=trace)
+            else:
+                rec.status = status
+                if rec.op is None:
+                    rec.op = op_name(desc)
+                if trace is not None:
+                    rec.trace = trace
+            return rec
+
+        out: List[Tuple[Status, CompletionRecord]] = []
+        failed = next((d for d in after
+                       if d.is_done() and d.status in (Status.ERROR, Status.OVERFLOW)), None)
+        if failed is not None:
+            # a torn fence fails the whole batch (nothing may launch)
+            for desc, trace, rec in zip(descs, traces, recs):
+                rec = bind(rec, desc, Status.ERROR, trace)
+                rec.error = f"dependency failed: {failed.status.name}"
+                self.records[desc.desc_id] = rec
+                out.append((Status.ERROR, rec))
+            self._count_submitted(len(descs), fused=True)
+            for _, rec in out:
+                self._notify(rec)
+            return out
+        deps = [d for d in after if not d.is_done()]
+        if deps:
+            if len(self._deferred) + len(descs) > self.max_deferred:
+                return [(Status.RETRY, CompletionRecord(
+                    desc_id=descs[0].desc_id, status=Status.RETRY,
+                    op=op_name(descs[0])))]
+            for desc, trace, rec in zip(descs, traces, recs):
+                rec = bind(rec, desc, Status.PENDING, trace)
+                if rec.trace is not None:
+                    rec.trace.mark("accept")
+                self.records[desc.desc_id] = rec
+                # members park individually but keep their fused_n stamp, so
+                # the amortized doorbell charge survives the fence hold
+                self._deferred.append((desc, group, wq_idx, producer,
+                                       list(deps), rec))
+                out.append((Status.PENDING, rec))
+            self._count_submitted(len(descs), fused=True)
+            self.kick()
+            return out
+        status = self.wq(group, wq_idx).submit_many(descs, producer=producer)
+        if status == Status.RETRY:
+            return [(Status.RETRY, CompletionRecord(
+                desc_id=descs[0].desc_id, status=Status.RETRY,
+                op=op_name(descs[0])))]
+        for desc, trace, rec in zip(descs, traces, recs):
+            rec = bind(rec, desc, Status.PENDING, trace)
+            if rec.trace is not None:
+                rec.trace.mark("accept")
+            self.records[desc.desc_id] = rec
+            out.append((Status.PENDING, rec))
+        self._count_submitted(len(descs), fused=True)
+        self.kick()
+        return out
 
     # ------------------------------------------------------------------ dispatch
     def _pump_deferred(self):
@@ -403,21 +519,32 @@ class StreamEngine:
             if remaining:
                 still.append((desc, group, wq, producer, remaining, rec))
                 continue
-            status = self.wq(group, wq).submit(desc, producer=producer)
+            # each deferred entry targets its own (group, wq) — there is no
+            # homogeneous burst to fuse here
+            status = self.wq(group, wq).submit(desc, producer=producer)  # dsalint: disable=DSA106
             if status == Status.RETRY:
                 still.append((desc, group, wq, producer, [], rec))
         self._deferred = still
 
     def kick(self):
         """Group arbiters: release retired fences, then move descriptors from
-        WQs to free PE slots."""
+        WQs onto PE slots.  Retirement scans only the in-flight list and
+        dispatch pops recycled slot objects off the free ring, so a kick
+        costs O(in-flight + dispatched) — an idle or fully-busy engine pays
+        nothing per spare slot."""
         if self._deferred:
             self._pump_deferred()
         for g in self.config.groups:
-            slots = self._slots[g.name]
-            for slot in slots:
-                self._retire(slot)
-            free = [s for s in slots if not s.busy]
+            active = self._active[g.name]
+            free = self._free[g.name]
+            if active:
+                still = []
+                for s in active:
+                    if self._retire(s):
+                        free.append(s)
+                    else:
+                        still.append(s)
+                active[:] = still
             while free:
                 picked = self._arbitrate(g)
                 if picked is None:
@@ -425,6 +552,7 @@ class StreamEngine:
                 desc, src_wq = picked
                 slot = free.pop()
                 self._launch(slot, desc, src_wq)
+                active.append(slot)
 
     def _arbitrate(self, g: GroupConfig) -> Optional[Tuple[Submittable, WorkQueue]]:
         """Priority-weighted deficit draining (paper Fig. 9 arbiter).
@@ -472,7 +600,11 @@ class StreamEngine:
             if src_wq.traffic_class == "to_cache":
                 dst_tier = "vmem"
             if src_wq.mode == "shared":
-                enqcmd_s = self.model.enqcmd_overhead_s
+                # fused-doorbell amortization (paper Fig. 3 / G1): a burst
+                # of N descriptors submitted through one doorbell pays one
+                # non-posted ENQCMD round trip total, i.e. 1/N each
+                fused_n = max(int(getattr(desc, "fused_n", 1) or 1), 1)
+                enqcmd_s = self.model.enqcmd_overhead_s / fused_n
         slot.record = rec
         slot.t0 = time.perf_counter()
         slot.outputs = None
@@ -567,6 +699,19 @@ class StreamEngine:
         elif d.op == OpType.BATCH_COPY:
             out = ops.batch_copy(d.src, d.dst_pool, d.src_idx, d.dst_idx, interpret=it)
             t = t_op(nbytes, batch_size=int(d.src_idx.shape[0]))
+        elif d.op == OpType.COPY_CRC:
+            # fused memcpy+CRC32: one launch, one read pass feeding both the
+            # write stream and the checksum — vs two launches and two read
+            # passes (memcpy at 1.0 + crc32 at 0.5) unfused
+            out = ops.copy_crc(d.src, interpret=it)
+            t = t_op(nbytes)
+        elif d.op == OpType.FILL_VERIFY:
+            # fused fill+compare_pattern: the verify reads the tile just
+            # written in-kernel, so the pair costs one fill (0.5) instead of
+            # fill + compare_pattern (0.5 + 0.5) across two launches
+            out = ops.fill_verify(jnp.asarray(d.pattern, jnp.uint32),
+                                  d.n_words, interpret=it)
+            t = t_op(nbytes, read_factor=0.5)
         elif d.op == OpType.CACHE_FLUSH:
             out = ()  # no TPU analogue (DESIGN.md); modeled only
             t = t_op(nbytes, read_factor=0.5)
@@ -614,16 +759,25 @@ class StreamEngine:
         self.kick()
         return rec.is_done()
 
+    def _recycle(self, gname: str, slot: _PESlot) -> bool:
+        """Retire one in-flight slot and return it to the free ring (the
+        blocking-wait counterpart of kick()'s active-list sweep)."""
+        if self._retire(slot):
+            self._active[gname].remove(slot)
+            self._free[gname].append(slot)
+            return True
+        return False
+
     def wait(self, rec: CompletionRecord):
         """UMWAIT analogue: block until the completion record resolves."""
         while not rec.is_done():  # dsalint: disable=DSA103 — this IS the raw wait primitive WaitPolicy builds on
             self.kick()
             if rec.status == Status.RUNNING:
-                for slots in self._slots.values():
-                    for s in slots:
+                for gname, active in self._active.items():
+                    for s in list(active):
                         if s.record is rec:
                             s.block()
-                            self._retire(s)
+                            self._recycle(gname, s)
         self.kick()
         return rec.result
 
@@ -633,12 +787,12 @@ class StreamEngine:
         left for Device.drain(), which pumps every instance."""
         while (  # dsalint: disable=DSA103 — engine drain is the terminal pump
             any(len(w) for g in self.config.groups for w in g.wqs)
-            or any(s.busy for slots in self._slots.values() for s in slots)
+            or any(s.busy for active in self._active.values() for s in active)
             or any(all(d.is_done() for d in deps) for *_, deps, _rec in self._deferred)
         ):
             self.kick()
-            for slots in self._slots.values():
-                for s in slots:
+            for gname, active in self._active.items():
+                for s in list(active):
                     if s.busy:
                         s.block()
-                        self._retire(s)
+                        self._recycle(gname, s)

@@ -20,7 +20,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Deque, Optional, Tuple, Union
+from typing import Deque, Optional, Sequence, Tuple, Union
 
 from repro.analysis import lockcheck as _lockcheck
 from repro.core.descriptor import BatchDescriptor, Status, WorkDescriptor
@@ -144,6 +144,32 @@ class WorkQueue:
             self.stats["submitted"] += 1
             self.stats["bytes_submitted"] += desc.nbytes
             return Status.PENDING
+
+    def submit_many(self, descs: Sequence[Submittable],
+                    producer: Optional[str] = None) -> Status:
+        """Fused-doorbell enqueue: accept ``descs`` atomically under ONE lock
+        acquisition (the single MOVDIR64B/ENQCMD analogue for a batch), or
+        RETRY without enqueuing anything when the whole burst doesn't fit —
+        all-or-nothing, so a retried burst can be resubmitted as a unit."""
+        now = time.perf_counter()
+        if self.mode == "dedicated":
+            if self.owner is not None and producer is not None and producer != self.owner:
+                raise PermissionError(
+                    f"DWQ {self.name} owned by {self.owner}; got producer {producer}"
+                )
+            return self._enqueue_burst(descs, now)
+        with self._lock:
+            return self._enqueue_burst(descs, now)
+
+    def _enqueue_burst(self, descs: Sequence[Submittable], now: float) -> Status:
+        if len(self._q) + len(descs) > self.size:
+            self.stats["retried"] += 1
+            return Status.RETRY
+        for d in descs:
+            self._q.append((d, now))
+        self.stats["submitted"] += len(descs)
+        self.stats["bytes_submitted"] += sum(d.nbytes for d in descs)
+        return Status.PENDING
 
     def pop(self) -> Optional[Submittable]:
         with self._lock:

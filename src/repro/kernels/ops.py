@@ -9,6 +9,7 @@ Every function has a bit-exact oracle in ref.py.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from typing import Optional, Tuple
 
@@ -24,6 +25,7 @@ from repro.kernels import (
     delta_create as _dc,
     dualcast as _dual,
     fill as _fill,
+    fused as _fused,
     memcpy as _mc,
     ref as _ref,
 )
@@ -160,13 +162,23 @@ def dualcast(x: jax.Array, *, interpret: Optional[bool] = None):
 
 # --------------------------------------------------------------------------- crc32
 _CRC_TABLES = jnp.asarray(_ref.make_crc_tables(4))
-_SHIFT_CACHE: dict = {}
+# Bounded LRU of crc32_combine shift matrices, keyed by chunk byte length.
+# Sweeps over many distinct sizes (gen_sweep, long-running services) would
+# otherwise grow this without limit — one matrix per size ever seen.
+_SHIFT_CACHE: "collections.OrderedDict[int, np.ndarray]" = collections.OrderedDict()
+_SHIFT_CACHE_MAX = 64
 
 
 def _shift_mat(chunk_bytes: int) -> jax.Array:
-    if chunk_bytes not in _SHIFT_CACHE:
-        _SHIFT_CACHE[chunk_bytes] = _ref.crc32_shift_matrix(chunk_bytes)  # numpy
-    return jnp.asarray(_SHIFT_CACHE[chunk_bytes])
+    mat = _SHIFT_CACHE.get(chunk_bytes)
+    if mat is None:
+        mat = _ref.crc32_shift_matrix(chunk_bytes)  # numpy
+        _SHIFT_CACHE[chunk_bytes] = mat
+        while len(_SHIFT_CACHE) > _SHIFT_CACHE_MAX:
+            _SHIFT_CACHE.popitem(last=False)  # evict least-recently-used
+    else:
+        _SHIFT_CACHE.move_to_end(chunk_bytes)
+    return jnp.asarray(mat)
 
 
 def _pick_chunks(n_words: int, max_chunks: int = 256) -> int:
@@ -190,6 +202,51 @@ def crc32(x: jax.Array, *, interpret: Optional[bool] = None, max_chunks: int = 2
         return states[0]
     mat = _shift_mat((n_words // C) * 4)
     return _crc.combine_chunk_crcs(states, mat)
+
+
+# --------------------------------------------------------------------------- fused pairs
+@functools.partial(jax.jit, static_argnames=("interpret", "max_chunks"))
+def copy_crc(x: jax.Array, *, interpret: Optional[bool] = None,
+             max_chunks: int = 256):
+    """Fused memcpy + CRC32 in ONE kernel launch: returns ``(copy, crc)``
+    where ``copy`` is bit-identical to ``memcpy(x)`` and ``crc`` matches
+    ``crc32(x)`` (zlib-compatible u32 scalar).  One read pass feeds both
+    the write stream and the checksum — vs two launches and two read
+    passes unfused."""
+    interpret = _interpret_default() if interpret is None else interpret
+    flat = _bitcast_to_u32(x)
+    n_words = flat.shape[0]
+    C = _pick_chunks(n_words, max_chunks)
+    data = flat.reshape(C, n_words // C)
+    states, dst = _fused.copy_crc_words(data, _CRC_TABLES, interpret=interpret)
+    if C == 1:
+        crc = states[0]
+    else:
+        crc = _crc.combine_chunk_crcs(states, _shift_mat((n_words // C) * 4))
+    return from_words(dst, n_words, x.shape, x.dtype), crc
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "interpret"))
+def fill_verify(pattern: jax.Array, n_words: int, *,
+                interpret: Optional[bool] = None):
+    """Fused fill + compare_pattern in ONE kernel launch: returns
+    ``(filled, (ok, first_bad_idx))`` where ``filled`` is bit-identical to
+    ``fill(pattern, n_words)`` and the verification pair matches
+    ``compare_pattern(filled, pattern)`` — computed in-kernel from the
+    just-written tile (the DSA fill-then-verify integrity idiom)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    rows = -(-n_words // LANES)
+    br = _pick_block_rows(rows, 1)
+    dst, per_block = _fused.fill_verify_words(
+        rows, pattern.astype(jnp.uint32), block_rows=br, interpret=interpret)
+    filled = dst.reshape(-1)[:n_words]
+    counts, firsts = per_block[:, 0], per_block[:, 1]
+    block_words = br * LANES
+    idx_global = jnp.arange(per_block.shape[0]) * block_words + firsts
+    valid = (counts > 0) & (idx_global < n_words)
+    first = jnp.min(jnp.where(valid, idx_global, np.iinfo(np.int32).max))
+    real = valid.any()
+    return filled, (~real, jnp.where(real, first, -1))
 
 
 # --------------------------------------------------------------------------- delta records

@@ -147,6 +147,16 @@ class Sampler:
                 self._record(row, f"engine.{name}.errors", d["errors"], t)
                 self._record(row, f"engine.{name}.gbps",
                              d["bytes"] / dt / 1e9, t, "GB/s")
+                # submission-side rates: accepted submits this tick and the
+                # fraction that arrived through a fused doorbell
+                # (submit_many / submit ring) — the batch-amortization
+                # health gauge for the pcm_repro SUB/s + FUSED% columns
+                subs = d.get("submitted", 0)
+                self._record(row, f"engine.{name}.submits", subs, t)
+                self._record(row, f"engine.{name}.submits_per_s",
+                             subs / dt, t, "/s")
+                self._record(row, f"engine.{name}.fused_frac",
+                             d.get("fused_descs", 0) / max(subs, 1), t)
                 # modeled busy-time over wall interval: the engine-side
                 # utilization estimate (can exceed 1 when PEs run parallel)
                 self._record(row, f"engine.{name}.util",

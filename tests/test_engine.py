@@ -96,9 +96,9 @@ def test_priority_arbitration():
     lo = [WorkDescriptor(op=OpType.MEMCPY, src=x) for _ in range(6)]
     hi = [WorkDescriptor(op=OpType.MEMCPY, src=x) for _ in range(6)]
     for d in lo:
-        eng.wq(0, 0).submit(d)  # dsalint: disable=DSA101 — raw WQ submit returns Status
+        eng.wq(0, 0).submit(d)  # dsalint: disable=DSA101,DSA106 — raw WQ submit returns Status
     for d in hi:
-        eng.wq(0, 1).submit(d)  # dsalint: disable=DSA101 — raw WQ submit returns Status
+        eng.wq(0, 1).submit(d)  # dsalint: disable=DSA101,DSA106 — raw WQ submit returns Status
     eng.drain()
     assert eng.wq(0, 1).stats["dispatched"] == 6
     assert eng.wq(0, 0).stats["dispatched"] == 6  # no starvation
@@ -108,7 +108,7 @@ def test_multi_instance_round_robin(rng):
     s = make_device(n_instances=3, policy="round_robin")
     x = jnp.zeros((8, 128), jnp.float32)
     for _ in range(6):
-        s.memcpy_async(x).wait()
+        s.memcpy_async(x).wait()  # dsalint: disable=DSA106 — per-descriptor path under test
     used = [e for e in s.engines if any(w.stats["submitted"] for g in e.config.groups for w in g.wqs)]
     assert len(used) == 3  # load balanced
 

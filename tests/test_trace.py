@@ -346,7 +346,7 @@ def test_queuefull_trace_is_terminated_not_leaked(buf):
     saw_full = False
     try:
         for _ in range(64):
-            futs.append(device.memcpy_async(buf))
+            futs.append(device.memcpy_async(buf))  # dsalint: disable=DSA106 — per-descriptor path under test
     except QueueFull:
         saw_full = True
     if futs:

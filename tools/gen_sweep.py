@@ -1,0 +1,227 @@
+"""gen_sweep — generated submit-pattern sweep over the offload engine.
+
+Generates a parameterized matrix of submission patterns — op mix x
+transfer size x batch depth x WQ mode x wait policy — runs each pattern
+against a fresh device, and reports the per-submit overhead in us/op:
+the host-side cost the paper's batch-amortization guideline (Fig. 3 / G1)
+is about.  The per-descriptor legs (b1) are the baseline; the batched legs
+(b8/b32) go through ``Device.submit_many`` and share one doorbell + one
+engine kick per burst.
+
+    PYTHONPATH=src python tools/gen_sweep.py [--quick] [--iters N]
+        [--json PATH] [--merge-into BENCH.json] [--check] [--list]
+
+Row schema matches ``benchmarks/run.py --json``, so
+``tools/bench_compare.py`` gates the sweep directly (CI uses
+``--require '^sweep/'`` plus a loose ``--figure-tolerance sweep=...``):
+
+    {"name": "sweep/memcpy/1KiB/b8/swq/umwait",
+     "us_per_call": <submit-phase us per descriptor>,
+     "derived": "n=64 submit_wall=...us e2e=...ms"}
+
+``us_per_call`` times the SUBMIT PHASE only — first doorbell to last,
+divided by descriptor count, median over ``--iters`` — after a JIT warmup
+and with completion waiting off the clock, so it isolates exactly the
+overhead ``submit_many`` amortizes.  The derived-only claim row
+(``us_per_call=-1``) records the relative b1 -> b8 drop for 1 KiB copies;
+``--check`` exits 1 when that drop is under 25%.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import sys
+import time
+from pathlib import Path
+from typing import List, Optional
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import OpType, WorkDescriptor, make_device  # noqa: E402
+
+#: the claim row's pattern legs (swq = the ENQCMD path the paper amortizes)
+CLAIM_BASE = "sweep/memcpy/1KiB/b1/swq/umwait"
+CLAIM_BATCH = "sweep/memcpy/1KiB/b8/swq/umwait"
+CLAIM_ROW = "sweep/claim/submit_overhead_drop_1KiB"
+CLAIM_MIN_DROP = 0.25
+
+SIZE_LABELS = {1 << 10: "1KiB", 64 << 10: "64KiB", 1 << 20: "1MiB"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    """One generated submit pattern (a point in the sweep matrix)."""
+
+    op: str          # "memcpy" | "crc32" | "fill"
+    size: int        # transfer bytes per descriptor
+    batch: int       # descriptors per doorbell (1 = per-descriptor submit)
+    wq: str          # "dwq" | "swq"
+    wait: str        # completion wait policy name
+    n: int = 64      # descriptors per timed iteration
+
+    @property
+    def name(self) -> str:
+        return (f"sweep/{self.op}/{SIZE_LABELS[self.size]}/b{self.batch}/"
+                f"{self.wq}/{self.wait}")
+
+
+def generate(quick: bool = False) -> List[Pattern]:
+    """The pattern matrix.  quick keeps the legs CI gates (both WQ modes,
+    b1 vs b8, small + medium transfers) and drops the rest."""
+    if quick:
+        ops = ("memcpy", "crc32")
+        sizes = (1 << 10, 64 << 10)
+        batches = (1, 8)
+        wqs = ("dwq", "swq")
+        waits = ("umwait",)
+    else:
+        ops = ("memcpy", "crc32", "fill")
+        sizes = (1 << 10, 64 << 10, 1 << 20)
+        batches = (1, 8, 32)
+        wqs = ("dwq", "swq")
+        waits = ("spin", "umwait")
+    return [Pattern(op, size, batch, wq, wait)
+            for op in ops for size in sizes for batch in batches
+            for wq in wqs for wait in waits]
+
+
+def _make_descs(p: Pattern) -> List[WorkDescriptor]:
+    n_words = max(p.size // 4, 1)
+    if p.op == "fill":
+        pat = jnp.asarray([0xDEADBEEF], jnp.uint32)
+        return [WorkDescriptor(op=OpType.FILL, pattern=pat, n_words=n_words)
+                for _ in range(p.n)]
+    rng = np.random.default_rng(7)
+    src = jnp.asarray(rng.integers(0, 2**32, n_words, dtype=np.uint32))
+    op = OpType.MEMCPY if p.op == "memcpy" else OpType.CRC32
+    # one shared source buffer: the sweep times submission, not allocation
+    return [WorkDescriptor(op=op, src=src) for _ in range(p.n)]
+
+
+def run_pattern(p: Pattern, iters: int = 3) -> dict:
+    """Run one pattern on a fresh device; us_per_call = submit-phase wall
+    per descriptor (median over iters), completions retired off the clock."""
+    device = make_device(
+        wq_mode="dedicated" if p.wq == "dwq" else "shared",
+        wq_size=max(2 * p.n, 64),
+        wait_policy=p.wait,
+    )
+    warm = _make_descs(dataclasses.replace(p, n=1))
+    device.wait_all([device.submit(warm[0])])  # JIT warmup off the clock
+
+    submit_us: List[float] = []
+    e2e_s = 0.0
+    for _ in range(iters):
+        descs = _make_descs(p)
+        t0 = time.perf_counter()
+        if p.batch == 1:
+            futs = [device.submit(d) for d in descs]  # dsalint: disable=DSA106 — the per-descriptor baseline leg
+        else:
+            futs = device.submit_many(descs, chunk=p.batch)
+        t1 = time.perf_counter()
+        device.wait_all(futs)
+        e2e_s = time.perf_counter() - t0
+        submit_us.append((t1 - t0) / p.n * 1e6)
+    us = float(statistics.median(submit_us))
+    return {
+        "name": p.name,
+        "us_per_call": us,
+        "derived": (f"n={p.n} submit_wall={us * p.n:.1f}us "
+                    f"e2e={e2e_s * 1e3:.2f}ms"),
+    }
+
+
+def claim_row(rows: List[dict]) -> dict:
+    """Derived-only row recording the b1 -> b8 submit-overhead drop for
+    1 KiB copies on the shared-WQ path (the PR's >=25% acceptance bar)."""
+    us = {r["name"]: r["us_per_call"] for r in rows}
+    base, batched = us.get(CLAIM_BASE), us.get(CLAIM_BATCH)
+    if not base or batched is None:
+        return {"name": CLAIM_ROW, "us_per_call": -1.0,
+                "derived": "drop=n/a (claim legs not in this sweep)"}
+    drop = (base - batched) / base
+    return {"name": CLAIM_ROW, "us_per_call": -1.0,
+            "derived": (f"drop={drop:.1%} (b1={base:.2f}us -> "
+                        f"b8={batched:.2f}us, min {CLAIM_MIN_DROP:.0%})")}
+
+
+def claim_drop(rows: List[dict]) -> Optional[float]:
+    us = {r["name"]: r["us_per_call"] for r in rows}
+    base, batched = us.get(CLAIM_BASE), us.get(CLAIM_BATCH)
+    if not base or batched is None:
+        return None
+    return (base - batched) / base
+
+
+def merge_into(path: str, rows: List[dict]) -> None:
+    """Replace the sweep/ rows of an existing bench JSON with this run's."""
+    p = Path(path)
+    existing = json.loads(p.read_text()) if p.exists() else []
+    kept = [r for r in existing if not r["name"].startswith("sweep/")]
+    p.write_text(json.dumps(kept + rows, indent=1))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="gen_sweep", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix (the CI bench-smoke legs)")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timed iterations per pattern (median; default 3)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as bench_compare-compatible JSON")
+    ap.add_argument("--merge-into", default=None, metavar="BENCH.json",
+                    help="replace the sweep/ rows inside an existing bench "
+                         "JSON with this run's rows")
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit 1 unless the 1KiB b1->b8 submit-overhead "
+                         f"drop is >= {CLAIM_MIN_DROP:.0%}")
+    ap.add_argument("--list", action="store_true",
+                    help="print the generated pattern names and exit")
+    args = ap.parse_args(argv)
+
+    patterns = generate(quick=args.quick)
+    if args.list:
+        for p in patterns:
+            print(p.name)
+        return 0
+
+    rows: List[dict] = []
+    print("name,us_per_call,derived")
+    for p in patterns:
+        row = run_pattern(p, iters=args.iters)
+        rows.append(row)
+        print(f"{row['name']},{row['us_per_call']:.3f},{row['derived']}",
+              flush=True)
+    rows.append(claim_row(rows))
+    print(f"{rows[-1]['name']},{rows[-1]['us_per_call']:.0f},"
+          f"{rows[-1]['derived']}")
+
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=1))
+    if args.merge_into:
+        merge_into(args.merge_into, rows)
+
+    if args.check:
+        drop = claim_drop(rows)
+        if drop is None:
+            print("gen_sweep: claim legs missing from the sweep",
+                  file=sys.stderr)
+            return 1
+        if drop < CLAIM_MIN_DROP:
+            print(f"gen_sweep: submit-overhead drop {drop:.1%} is under the "
+                  f"{CLAIM_MIN_DROP:.0%} bar", file=sys.stderr)
+            return 1
+        print(f"gen_sweep: check ok — drop {drop:.1%} >= "
+              f"{CLAIM_MIN_DROP:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

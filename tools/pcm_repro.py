@@ -46,7 +46,8 @@ sys.path.insert(0, "src")
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import QueueFull, Topology, make_device  # noqa: E402
+from repro.core import (  # noqa: E402
+    OpType, QueueFull, Topology, WorkDescriptor, make_device)
 from repro.obs import PHASES, Sampler  # noqa: E402
 
 DEFAULT_CSV = "results/obs/pcm_repro.csv"
@@ -79,26 +80,40 @@ class BurstWorkload(threading.Thread):
         self.submitted = 0
 
     def burst(self, n: int = 8) -> None:
-        """Submit one burst of n descriptors and retire them."""
+        """Submit one burst of n descriptors and retire them.  Alternating
+        bursts go through the fused ``submit_many`` doorbell, so the SUB/s
+        and FUSED% columns show both submission paths live."""
         futs = []
-        for i in range(n):
-            k = self.submitted + i
-            home = k % len(self.bufs)
-            buf = self.bufs[home][k % len(WORKLOAD_SIZES)]
-            node = None
-            if self.numa:
-                # a quarter of the ops are placed on the remote node (in
-                # both directions) — the engine reads across the link,
-                # lighting up the CROSS-GB/s column
-                node = (1 - home) % self.device.topology.n_nodes \
-                    if k % 8 in (1, 6) else home
+        if (self.submitted // max(n, 1)) % 2 == 0:
+            # fused burst: homogeneous copies through one doorbell
+            descs = []
+            for i in range(n):
+                k = self.submitted + i
+                buf = self.bufs[k % len(self.bufs)][k % len(WORKLOAD_SIZES)]
+                descs.append(WorkDescriptor(op=OpType.MEMCPY, src=buf))
             try:
-                if k % 4 == 3:
-                    futs.append(self.device.crc32_async(buf, node=node))
-                else:
-                    futs.append(self.device.memcpy_async(buf, node=node))
+                futs = self.device.submit_many(descs)
             except QueueFull:
                 time.sleep(0.001)  # backpressure: let the PEs catch up
+        else:
+            for i in range(n):
+                k = self.submitted + i
+                home = k % len(self.bufs)
+                buf = self.bufs[home][k % len(WORKLOAD_SIZES)]
+                node = None
+                if self.numa:
+                    # a quarter of the ops are placed on the remote node (in
+                    # both directions) — the engine reads across the link,
+                    # lighting up the CROSS-GB/s column
+                    node = (1 - home) % self.device.topology.n_nodes \
+                        if k % 8 in (1, 6) else home
+                try:
+                    if k % 4 == 3:
+                        futs.append(self.device.crc32_async(buf, node=node))
+                    else:
+                        futs.append(self.device.memcpy_async(buf, node=node))
+                except QueueFull:
+                    time.sleep(0.001)  # backpressure: let the PEs catch up
         self.submitted += len(futs)
         if futs:
             self.device.wait_all(futs)
@@ -127,6 +142,7 @@ def render_frame(sampler: Sampler, device, numa: bool, frame: int) -> str:
     lines.append(f"pcm_repro frame {frame}  t={row.get('time_s', 0.0):7.2f}s  "
                  f"interval={row.get('dt_s', 0.0):.2f}s")
     hdr = (f"{'ENGINE':<10s} {'NODE':>4s} {'GB/s':>8s} {'OPS/s':>9s} "
+           f"{'SUB/s':>9s} {'FUSED%':>6s} "
            f"{'UTIL':>6s} {'WQ-OCC':>6s} {'QDELAY-us':>9s} {'RETRY':>6s} "
            f"{'ERR':>4s}")
     lines.append(hdr)
@@ -135,9 +151,12 @@ def render_frame(sampler: Sampler, device, numa: bool, frame: int) -> str:
     for e in device.engines:
         n = e.name
         ops_s = row.get(f"engine.{n}.ops", 0.0) / dt
+        fused = row.get(f"engine.{n}.fused_frac")
         lines.append(
             f"{n:<10s} {getattr(e, 'node_id', 0):>4d} "
             f"{_cell(row, f'engine.{n}.gbps'):>8s} {ops_s:>9.1f} "
+            f"{_cell(row, f'engine.{n}.submits_per_s', '{:.1f}'):>9s} "
+            f"{('-' if fused is None else f'{fused:.0%}'):>6s} "
             f"{_cell(row, f'engine.{n}.util'):>6s} "
             f"{_cell(row, f'engine.{n}.wq_occupancy'):>6s} "
             f"{_cell(row, f'engine.{n}.queue_delay_us', '{:.1f}'):>9s} "
